@@ -1,0 +1,32 @@
+"""Paper Fig. 6 — GEMV cycle latency (a) and execution time (b) versus
+square-matrix dimension, for IMAGine / IMAGine-slice4 / CCB / CoMeFa /
+SPAR-2 / BRAMAC, at 8-bit precision (plus 4/16-bit latency sweeps)."""
+
+from repro.core.latency_model import FIG6_DESIGNS, execution_time_us
+
+DIMS = [64, 128, 256, 512, 1024, 2048]
+
+
+def run():
+    rows = []
+    for p in (4, 8, 16):
+        for name, (fn, f_mhz) in FIG6_DESIGNS.items():
+            cyc = [fn(d, p) for d in DIMS]
+            rows.append((f"fig6a.p{p}.{name}", "",
+                         "cycles@" + "/".join(map(str, DIMS)) + "="
+                         + "/".join(map(str, cyc))))
+    for name in FIG6_DESIGNS:
+        try:
+            times = [round(execution_time_us(name, d, 8), 1) for d in DIMS]
+        except ValueError:
+            continue  # BRAMAC: no reported f_sys
+        rows.append((f"fig6b.{name}", "",
+                     "exec_us@" + "/".join(map(str, DIMS)) + "="
+                     + "/".join(map(str, times))))
+    # headline: IMAGine wins execution time at every dim
+    wins = all(
+        execution_time_us("IMAGine", d) < min(
+            execution_time_us(n, d) for n in ("CCB", "CoMeFa", "SPAR-2"))
+        for d in DIMS)
+    rows.append(("fig6b.imagine_fastest_exec", "", str(wins)))
+    return rows

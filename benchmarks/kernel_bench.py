@@ -1,0 +1,58 @@
+"""Kernel micro-benchmarks (CPU interpret mode for wall time; the derived
+column reports the roofline-relevant quantities: bytes/weight, digit passes,
+arithmetic intensity on the TPU target)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gemv_engine import quantize_linear
+from repro.kernels.bitplane_gemv.ops import bitplane_gemv
+from repro.kernels.bitplane_gemv.ref import bitplane_gemv_ref
+from repro.kernels.int8_matvec.ops import int8_matvec
+
+
+def _time(fn, *args, reps=3, **kw):
+    fn(*args, **kw).block_until_ready()  # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    b, kdim, n = 8, 1024, 1024
+    w = jnp.asarray(rng.standard_normal((kdim, n)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((b, kdim)).astype(np.float32))
+
+    for bits in (8, 4, 2):
+        ql = quantize_linear(w, bits)
+        for radix in (1, 2):
+            if bits % radix:
+                continue
+            us = _time(bitplane_gemv, ql.packed, ql.scale, x,
+                       bits=bits, radix=radix, interpret=True)
+            passes = bits // radix
+            bytes_per_weight = bits / 8
+            macs = b * kdim * n
+            # TPU-target arithmetic intensity: digit-pass flops over packed
+            # weight bytes (weight-stationary, batch amortized)
+            ai = 2 * macs * passes / (kdim * n * bytes_per_weight)
+            rows.append((
+                f"kernels.bitplane_gemv.b{bits}.r{radix}", round(us, 1),
+                f"passes={passes} bytes/w={bytes_per_weight}"
+                f" tpu_arith_intensity={ai:.1f}flop/B"))
+        # oracle comparison cost (jnp ref)
+        us_ref = _time(bitplane_gemv_ref, ql.packed, ql.scale, x, bits=bits)
+        rows.append((f"kernels.bitplane_ref.b{bits}", round(us_ref, 1), ""))
+
+    ql8 = quantize_linear(w, 8)
+    us = _time(int8_matvec, ql8.packed, ql8.scale, x, interpret=True)
+    rows.append(("kernels.int8_matvec.baseline", round(us, 1),
+                 "bit-parallel comparison point"))
+    return rows

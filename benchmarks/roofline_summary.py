@@ -1,0 +1,33 @@
+"""TPU roofline summary: reads experiments/dryrun/*.json (produced by
+launch/dryrun.py) and emits the per-cell three-term roofline table."""
+
+import glob
+import json
+import os
+
+OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                   "experiments", "dryrun")
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        if name.startswith("_"):
+            continue
+        try:
+            r = json.load(open(path))
+        except Exception:
+            continue
+        if "compute_s" not in r:
+            continue
+        rows.append((
+            f"roofline.{name}", "",
+            f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s"
+            f" collective={r['collective_s']:.3e}s dom={r['dominant']}"
+            f" frac={r.get('roofline_fraction', 0):.4f}"
+            f" flops/dev={r['flops_per_device']:.3e}"))
+    if not rows:
+        rows.append(("roofline.missing", "",
+                     "run experiments/run_dryruns.py first"))
+    return rows

@@ -1,0 +1,17 @@
+"""Paper Table I — maximum frequencies of FPGA-PIM designs.
+
+Emits each design's f_PIM/f_BRAM and f_sys/f_BRAM ratios; the paper's point
+is that every prior design clocks well under BRAM Fmax except PiCaSO (and
+IMAGine, Table V)."""
+
+from repro.core.latency_model import TABLE_I
+
+
+def run():
+    rows = []
+    for name, (kind, device, f_bram, f_pim, f_sys) in TABLE_I.items():
+        rel_pim = round(f_pim / f_bram, 3)
+        rel_sys = round(f_sys / f_bram, 3) if f_sys else ""
+        rows.append((f"table1.{name}", "", f"fbram={f_bram}MHz"
+                     f" fpim={f_pim}MHz rel_pim={rel_pim} rel_sys={rel_sys}"))
+    return rows

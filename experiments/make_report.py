@@ -1,0 +1,94 @@
+#!/usr/bin/env python
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from
+experiments/dryrun/*.json.  Hillclimb (§Perf) entries are appended by hand
+with the hypothesis->change->measure log.
+
+  python experiments/make_report.py > /tmp/roofline_tables.md
+"""
+
+import glob
+import json
+import os
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "dryrun")
+
+ARCH_ORDER = [
+    "gemma3-27b", "mistral-large-123b", "starcoder2-15b", "qwen2.5-3b",
+    "llava-next-mistral-7b", "mamba2-130m", "zamba2-7b", "musicgen-medium",
+    "llama4-scout-17b-a16e", "qwen3-moe-235b-a22b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tagged=False):
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(OUT, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        if name.startswith("_"):
+            continue
+        r = json.load(open(path))
+        if "compute_s" not in r:
+            continue
+        is_base = (not r.get("engine_bits") and not r.get("split_local")
+                   and not r.get("tag"))
+        if tagged != (not is_base):
+            continue
+        recs[(r["arch"], r["shape"], bool(r["multi_pod"]))] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b/1e12:.2f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.2f}G"
+    return f"{b/1e6:.1f}M"
+
+
+def main():
+    recs = load()
+    print("### Single-pod (16x16 = 256 chips) baseline roofline — all cells\n")
+    print("| arch | shape | kind | HLO GFLOP/dev | HBM bytes/dev |"
+          " coll bytes/dev | compute s | memory s | collective s |"
+          " dominant | roofline frac | fits HBM |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|---|"[:-1])
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, False))
+            if r is None:
+                continue
+            ma = r.get("memory_analysis", {})
+            tot = (ma.get("argument_size_in_bytes", 0)
+                   + ma.get("temp_size_in_bytes", 0)
+                   - ma.get("alias_size_in_bytes", 0))
+            fits = "yes" if tot < 16e9 else f"NO ({tot/1e9:.0f}GB)"
+            print(f"| {arch} | {shape} | {r['kind']} |"
+                  f" {r['flops_per_device']/1e9:,.0f} |"
+                  f" {fmt_bytes(r['bytes_per_device'])} |"
+                  f" {fmt_bytes(r['collective_bytes_per_device']['total'])} |"
+                  f" {r['compute_s']:.3e} | {r['memory_s']:.3e} |"
+                  f" {r['collective_s']:.3e} |"
+                  f" {r['dominant'].replace('_s','')} |"
+                  f" {r.get('roofline_fraction', 0):.4f} | {fits} |")
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) — compile proof + terms\n")
+    print("| arch | shape | compile s | dominant | roofline frac |"
+          " coll bytes/dev |")
+    print("|---|---|---|---|---|---|")
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, True))
+            if r is None:
+                continue
+            print(f"| {arch} | {shape} | {r['compile_s']:.1f} |"
+                  f" {r['dominant'].replace('_s','')} |"
+                  f" {r.get('roofline_fraction', 0):.4f} |"
+                  f" {fmt_bytes(r['collective_bytes_per_device']['total'])} |")
+
+    n_pod = sum(1 for k in recs if not k[2])
+    n_multi = sum(1 for k in recs if k[2])
+    print(f"\ncells: {n_pod} single-pod + {n_multi} multi-pod, all compiled")
+
+
+if __name__ == "__main__":
+    main()

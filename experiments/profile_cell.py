@@ -1,0 +1,49 @@
+#!/usr/bin/env python
+"""Profile one dry-run cell: lower+compile, then dump the top byte/flop
+contributors (trip-count weighted) — the §Perf iteration's 'profiler'.
+
+  PYTHONPATH=src python experiments/profile_cell.py gemma3-27b decode_32k
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import sys  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def main():
+    arch, shape_name = sys.argv[1], sys.argv[2]
+    multi = "--multi-pod" in sys.argv
+    engine_bits = 0
+    for a in sys.argv:
+        if a.startswith("--engine-bits="):
+            engine_bits = int(a.split("=")[1])
+
+    from repro.config import SHAPES, get_arch
+    from repro.config.base import (EngineConfig, MeshConfig, RunConfig,
+                                   ServeConfig)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.hlo_cost import top_contributors
+
+    run = RunConfig(
+        model=get_arch(arch), shape=SHAPES[shape_name],
+        mesh=MeshConfig(multi_pod=multi),
+        serve=ServeConfig(engine=EngineConfig(
+            weight_bits=engine_bits, use_pallas=False)),
+    )
+    mesh = make_production_mesh(multi_pod=multi)
+    with jax.sharding.set_mesh(mesh):
+        fn, args, kind = build_cell(run, mesh)
+        compiled = fn.lower(*args).compile()
+    text = compiled.as_text()
+    print(f"== top contributors for {arch} x {shape_name} ({kind}) ==")
+    for nbytes, flops, op, where, meta in top_contributors(text, 25):
+        print(f"{nbytes/1e9:10.2f}GB {flops/1e9:12.2f}GF {op:22s} {where:50s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+#!/usr/bin/env python
+"""Orchestrate the full baseline dry-run sweep: every (arch x shape) cell on
+the single-pod (16,16) mesh and the multi-pod (2,16,16) mesh.
+
+Each cell runs in its own subprocess (fresh XLA, bounded memory); results
+land in experiments/dryrun/*.json.  Cells already done are skipped, so the
+sweep is restartable.  Order is smallest-model-first so failures surface
+fast.
+
+Usage:  python experiments/run_dryruns.py [--only-missing] [--timeout 4000]
+"""
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+OUT = os.path.join(HERE, "dryrun")
+
+# smallest-first (approx param count)
+ARCHS = [
+    "mamba2-130m",
+    "qwen2.5-3b",
+    "zamba2-7b",
+    "llava-next-mistral-7b",
+    "musicgen-medium",
+    "starcoder2-15b",
+    "llama4-scout-17b-a16e",
+    "gemma3-27b",
+    "qwen3-moe-235b-a22b",
+    "mistral-large-123b",
+]
+LONG_OK = {"gemma3-27b", "mamba2-130m", "zamba2-7b"}
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def cells():
+    for multi in (False, True):
+        for arch in ARCHS:
+            for shape in SHAPES:
+                if shape == "long_500k" and arch not in LONG_OK:
+                    continue
+                yield arch, shape, multi
+
+
+def result_path(arch, shape, multi):
+    suffix = "multipod" if multi else "pod"
+    return os.path.join(OUT, f"{arch}__{shape}__{suffix}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=4200)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(OUT, exist_ok=True)
+    todo = [c for c in cells()
+            if args.force or not os.path.exists(result_path(*c))]
+    print(f"{len(todo)} cells to run")
+    failures = []
+    for i, (arch, shape, multi) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--out", OUT]
+        if multi:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+        print(f"[{i+1}/{len(todo)}] {arch} {shape} "
+              f"{'multipod' if multi else 'pod'} ...", flush=True)
+        try:
+            proc = subprocess.run(cmd, capture_output=True, text=True,
+                                  timeout=args.timeout, cwd=REPO, env=env)
+            ok = proc.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok, proc = False, None
+        dt = time.time() - t0
+        if ok:
+            print(f"    done in {dt:.0f}s", flush=True)
+        else:
+            msg = (proc.stderr[-2000:] if proc else "TIMEOUT")
+            failures.append((arch, shape, multi, msg))
+            print(f"    FAILED after {dt:.0f}s:\n{msg}", flush=True)
+
+    print(f"\n{len(failures)} failures")
+    for arch, shape, multi, msg in failures:
+        print(f"  {arch} {shape} multi={multi}: {msg.splitlines()[-1] if msg.splitlines() else msg}")
+    with open(os.path.join(OUT, "_sweep_status.json"), "w") as f:
+        json.dump({"failures": [(a, s, m) for a, s, m, _ in failures],
+                   "total": len(todo)}, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: production-grade JAX reproduction of IMAGine (FPL 2024).
+
+IMAGine is an FPGA Processor-in-Memory GEMV engine overlay.  This package
+re-expresses its architectural contribution — weight-stationary, bit-serial
+(bit-plane) GEMV that scales with memory capacity — as a TPU-native JAX
+training/serving framework, together with an executable, cycle-accurate
+model of the original FPGA engine (ISA, tile controller, latency models)
+used to validate every number the paper reports.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.ckpt.checkpoint import load_checkpoint, save_checkpoint
+from repro.ckpt.manager import CheckpointManager
+
+__all__ = ["save_checkpoint", "load_checkpoint", "CheckpointManager"]

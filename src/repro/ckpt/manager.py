@@ -1,0 +1,73 @@
+"""Checkpoint lifecycle: rotation, async save, auto-resume."""
+
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.ckpt.checkpoint import latest_step, load_checkpoint, save_checkpoint
+
+
+class CheckpointManager:
+    """Rotating checkpoints with optional async (background-thread) save.
+
+    Async saves first device_get the tree synchronously (cheap host copy,
+    keeps a consistent snapshot) then compress+write off-thread so the step
+    loop never blocks on disk — the standard large-run recipe.
+    """
+
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 host_id: int = 0, n_hosts: int = 1):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, tree, extra: Optional[Dict[str, Any]] = None):
+        snapshot = jax.tree.map(lambda x: jax.device_get(x), tree)
+
+        def work():
+            save_checkpoint(self.directory, step, snapshot,
+                            host_id=self.host_id, n_hosts=self.n_hosts,
+                            extra=extra)
+            self._rotate()
+
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(target=work, daemon=True)
+            self._pending.start()
+        else:
+            work()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # --------------------------------------------------------------- restore
+    def restore_latest(self, template):
+        self.wait()
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None, None
+        tree, extra = load_checkpoint(self.directory, template, step)
+        return step, tree, extra
+
+    # ---------------------------------------------------------------- rotate
+    def _rotate(self):
+        steps = sorted(
+            int(n.split("_")[1]) for n in os.listdir(self.directory)
+            if n.startswith("step_") and
+            os.path.exists(os.path.join(self.directory, n, "COMMITTED"))
+        )
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

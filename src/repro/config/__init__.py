@@ -1,0 +1,31 @@
+from repro.config.base import (
+    EngineConfig,
+    MeshConfig,
+    ModelConfig,
+    RunConfig,
+    ServeConfig,
+    ShapeConfig,
+    TrainConfig,
+    SHAPES,
+)
+from repro.config.registry import (
+    available_archs,
+    get_arch,
+    get_reduced,
+    register_arch,
+)
+
+__all__ = [
+    "EngineConfig",
+    "MeshConfig",
+    "ModelConfig",
+    "RunConfig",
+    "ServeConfig",
+    "ShapeConfig",
+    "TrainConfig",
+    "SHAPES",
+    "available_archs",
+    "get_arch",
+    "get_reduced",
+    "register_arch",
+]

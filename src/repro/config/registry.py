@@ -1,0 +1,67 @@
+"""--arch registry.
+
+Each file in ``repro/configs/`` defines ``CONFIG`` (exact published dims) and
+``reduced()`` (a tiny same-family config for CPU smoke tests) and calls
+``register_arch``.  ``get_arch("gemma3-27b")`` imports lazily so that simply
+importing repro never pulls in every architecture module.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from repro.config.base import ModelConfig
+
+_REGISTRY: Dict[str, "ArchEntry"] = {}
+
+
+class ArchEntry:
+    def __init__(self, arch_id: str, config: ModelConfig, reduced: Callable[[], ModelConfig]):
+        self.arch_id = arch_id
+        self.config = config
+        self.reduced = reduced
+
+
+def register_arch(arch_id: str, config: ModelConfig, reduced: Callable[[], ModelConfig]) -> None:
+    if arch_id in _REGISTRY:
+        raise ValueError(f"duplicate arch id {arch_id!r}")
+    _REGISTRY[arch_id] = ArchEntry(arch_id, config, reduced)
+
+
+# arch-id -> module under repro.configs
+_ARCH_MODULES = {
+    "gemma3-27b": "gemma3_27b",
+    "mistral-large-123b": "mistral_large_123b",
+    "starcoder2-15b": "starcoder2_15b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-7b": "zamba2_7b",
+    "musicgen-medium": "musicgen_medium",
+    "llama4-scout-17b-a16e": "llama4_scout_17b_a16e",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+}
+
+
+def _load(arch_id: str) -> ArchEntry:
+    if arch_id not in _REGISTRY:
+        mod = _ARCH_MODULES.get(arch_id)
+        if mod is None:
+            raise KeyError(
+                f"unknown arch {arch_id!r}; available: {sorted(_ARCH_MODULES)}"
+            )
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[arch_id]
+
+
+def get_arch(arch_id: str) -> ModelConfig:
+    return _load(arch_id).config
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _load(arch_id).reduced()
+
+
+def available_archs() -> List[str]:
+    return sorted(_ARCH_MODULES)

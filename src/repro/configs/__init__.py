@@ -1,0 +1,3 @@
+"""Architecture configs (one module per assigned arch) + the paper's own
+FPGA configuration (``imagine_u55``).  Import via ``repro.config.get_arch``.
+"""

@@ -1,0 +1,25 @@
+"""The paper's contribution: the IMAGine GEMV engine.
+
+Two halves:
+  * paper-faithful FPGA model — ``isa``, ``controller``, ``tile_array``,
+    ``latency_model`` reproduce the 30-bit ISA, the tile-controller FSM and
+    the analytical clock/latency/scaling results of the paper;
+  * TPU-native engine — ``quantize``, ``bitplane``, ``gemv_engine`` implement
+    the same bit-serial GEMV semantics as a JAX/Pallas engine used on the
+    decode path of every assigned architecture.
+"""
+
+from repro.core.bitplane import pack_weights, to_bitplanes, unpack_weights
+from repro.core.gemv_engine import QuantizedLinear, gemv, quantize_linear
+from repro.core.quantize import dequantize, quantize_symmetric
+
+__all__ = [
+    "pack_weights",
+    "unpack_weights",
+    "to_bitplanes",
+    "QuantizedLinear",
+    "gemv",
+    "quantize_linear",
+    "dequantize",
+    "quantize_symmetric",
+]

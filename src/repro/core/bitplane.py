@@ -1,0 +1,82 @@
+"""Bit-plane storage format for the IMAGine engine.
+
+On the FPGA, a b-bit weight lives as b one-bit rows of a BRAM column and the
+PE retires one (radix-2) or two (radix-4 Booth, "slice4") bits per pass.  On
+TPU the dense analogue is: weights stored as signed b-bit integers packed
+into int8 words (b=8: one weight per byte; b=4: two; b=2: four) so the HBM
+footprint is exactly b/8 bytes per weight, and the kernel extracts bit-planes
+in-register (VREG) with shift/mask — the HBM→VMEM→VREG path mirrors the
+paper's BRAM→PE path.
+
+Packing is along the *input-feature* (K) axis, which is the axis the engine
+streams east→west.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def pack_weights(q: jnp.ndarray, bits: int, axis: int = 0) -> jnp.ndarray:
+    """Pack signed ``bits``-bit integer weights (held in int8) along ``axis``.
+
+    For bits=8 this is the identity.  For bits=4 (2), consecutive pairs
+    (quads) along ``axis`` share one int8 byte, low bits first.
+    """
+    if bits == 8:
+        return q.astype(jnp.int8)
+    per_byte = 8 // bits
+    mask = (1 << bits) - 1
+    if q.shape[axis] % per_byte != 0:
+        raise ValueError(
+            f"axis {axis} size {q.shape[axis]} not divisible by {per_byte}"
+        )
+    q = jnp.moveaxis(q, axis, 0)
+    u = q.astype(jnp.uint8) & mask  # two's-complement truncation to b bits
+    u = u.reshape((q.shape[0] // per_byte, per_byte) + q.shape[1:])
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint8) * bits).reshape(
+        (1, per_byte) + (1,) * (q.ndim - 1)
+    )
+    word = jnp.sum(
+        (u.astype(jnp.uint8) << shifts).astype(jnp.uint8), axis=1, dtype=jnp.uint8
+    )
+    return jnp.moveaxis(word.astype(jnp.int8), 0, axis)
+
+
+def unpack_weights(packed: jnp.ndarray, bits: int, axis: int = 0) -> jnp.ndarray:
+    """Inverse of :func:`pack_weights`; returns sign-extended int8 values."""
+    if bits == 8:
+        return packed.astype(jnp.int8)
+    per_byte = 8 // bits
+    mask = (1 << bits) - 1
+    sign_bit = 1 << (bits - 1)
+    p = jnp.moveaxis(packed, axis, 0).astype(jnp.uint8)
+    shifts = (jnp.arange(per_byte, dtype=jnp.uint8) * bits).reshape(
+        (1, per_byte) + (1,) * (p.ndim - 1)
+    )
+    u = (p[:, None] >> shifts) & mask
+    # sign extend: v = (u ^ sign) - sign
+    v = (u.astype(jnp.int16) ^ sign_bit) - sign_bit
+    v = v.reshape((p.shape[0] * per_byte,) + p.shape[1:])
+    return jnp.moveaxis(v.astype(jnp.int8), 0, axis)
+
+
+def to_bitplanes(q: np.ndarray, bits: int) -> np.ndarray:
+    """Explicit bit-plane view (paper Fig. 2 storage): plane b of the two's
+    complement code, shape ``(bits,) + q.shape`` with 0/1 entries.
+
+    Used by the FPGA executable model and as the oracle for the bit-serial
+    kernels: ``value = -2^{b-1}·plane[b-1] + Σ_{i<b-1} 2^i·plane[i]``.
+    """
+    q = np.asarray(q)
+    u = q.astype(np.int64) & ((1 << bits) - 1)
+    planes = np.stack([(u >> b) & 1 for b in range(bits)], axis=0)
+    return planes.astype(np.uint8)
+
+
+def from_bitplanes(planes: np.ndarray, bits: int) -> np.ndarray:
+    """Reassemble signed integers from bit-planes (numpy oracle)."""
+    weights = np.array([1 << b for b in range(bits - 1)] + [-(1 << (bits - 1))])
+    shape = (bits,) + (1,) * (planes.ndim - 1)
+    return np.sum(planes.astype(np.int64) * weights.reshape(shape), axis=0)

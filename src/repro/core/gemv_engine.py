@@ -1,0 +1,168 @@
+"""The IMAGine GEMV engine, TPU-native.
+
+``QuantizedLinear`` is the weight-stationary, bit-packed linear layer used on
+the decode (serving) path: weights live as signed b-bit integers packed into
+int8 (b/8 bytes per weight in HBM — the memory-roofline win that mirrors the
+paper's "PEs scale with memory capacity"), with per-output-channel float
+scales.
+
+``gemv`` dispatches between:
+  * the Pallas kernel (``repro.kernels.bitplane_gemv``) — the TPU hot path,
+    bit-serial over planes with radix 1/2/4 (radix-2 / radix-4-Booth /
+    nibble-serial), validated in interpret mode on CPU;
+  * a pure-jnp path with identical semantics, used for CPU execution and for
+    the 512-device dry-run lowering (Pallas TPU kernels do not lower on the
+    CPU backend).
+
+Both paths compute y = scale * (unpacked_int_W @ x) exactly (integer
+accumulation is exact in fp32 for b<=8 and K<=2^15 per tile).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import pack_weights, unpack_weights
+from repro.core.quantize import quantize_symmetric
+
+
+class QuantizedLinear(NamedTuple):
+    """Weight-stationary quantized linear: y = x @ W (W: in_features x out).
+
+    ``packed``: int8, shape (in_features * bits // 8, out_features) — K-axis
+    packed.  ``scale``: float32 (1, out_features).  ``bits``: python int.
+    """
+
+    packed: jnp.ndarray
+    scale: jnp.ndarray
+    bits: int
+    in_features: int
+    out_features: int
+
+
+def quantize_linear(w: jnp.ndarray, bits: int = 8) -> QuantizedLinear:
+    """Quantize a float (K, N) weight matrix into engine storage format."""
+    k, n = w.shape
+    q, scale = quantize_symmetric(w, bits, axis=0)
+    packed = pack_weights(q, bits, axis=0)
+    return QuantizedLinear(packed, scale, bits, k, n)
+
+
+def dequantize_linear(qlin: QuantizedLinear, dtype=jnp.float32) -> jnp.ndarray:
+    q = unpack_weights(qlin.packed, qlin.bits, axis=0)
+    return (q.astype(jnp.float32) * qlin.scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# engine forward
+# ---------------------------------------------------------------------------
+
+
+def gemv(
+    qlin: QuantizedLinear,
+    x: jnp.ndarray,
+    *,
+    radix: int = 1,
+    use_pallas: bool = False,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """y = x @ W for engine weights.  ``x``: (..., in_features).
+
+    ``radix`` selects how many weight bits each bit-serial pass retires
+    (1 = IMAGine radix-2 baseline, 2 = slice4/Booth-radix-4, 4 = nibble
+    pass); semantics are identical, the knob exists so the kernel can be
+    swept exactly like the paper sweeps its PE variants.
+    """
+    if use_pallas:
+        from repro.kernels.bitplane_gemv import ops as _ops
+
+        return _ops.bitplane_gemv(
+            qlin.packed, qlin.scale, x, bits=qlin.bits, radix=radix,
+            interpret=interpret, out_dtype=out_dtype,
+        )
+    return gemv_reference(qlin, x, out_dtype=out_dtype)
+
+
+def gemv_reference(qlin: QuantizedLinear, x: jnp.ndarray, out_dtype=jnp.float32):
+    """Pure-jnp engine path (also the dry-run lowering path).
+
+    Reads the packed int8 weights (b/8 bytes per weight of HBO traffic —
+    what the roofline memory term sees), unpacks in-register, and contracts
+    at int32->fp32 precision.
+    """
+    q = unpack_weights(qlin.packed, qlin.bits, axis=0)  # (K, N) int8
+    acc = jnp.einsum(
+        "...k,kn->...n",
+        x.astype(jnp.float32),
+        q.astype(jnp.float32),
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return (acc * qlin.scale).astype(out_dtype)
+
+
+def gemv_bit_serial_reference(
+    qlin: QuantizedLinear, x: jnp.ndarray, radix: int = 1, out_dtype=jnp.float32
+):
+    """Bit-serial oracle: explicitly walks bit-planes like the FPGA engine.
+
+    y = scale * sum_d  digit_weight_d * (plane_d @ x)
+
+    where planes are ``radix``-bit digits of the two's-complement code, the
+    top digit carrying negative weight.  Numerically identical to
+    :func:`gemv_reference`; used by kernel tests and the ISA cross-check.
+    """
+    bits = qlin.bits
+    if bits % radix != 0:
+        raise ValueError(f"radix {radix} must divide bits {bits}")
+    q = unpack_weights(qlin.packed, qlin.bits, axis=0)
+    u = q.astype(jnp.int32) & ((1 << bits) - 1)  # two's complement code
+    n_digits = bits // radix
+    acc = jnp.zeros(x.shape[:-1] + (qlin.out_features,), jnp.float32)
+    for d in range(n_digits):
+        digit = (u >> (d * radix)) & ((1 << radix) - 1)
+        weight = float(1 << (d * radix))
+        if d == n_digits - 1:
+            # top digit: its MSB is the sign bit of the two's complement code
+            sign_bit = (digit >> (radix - 1)) & 1
+            digit = digit - (sign_bit << radix)
+        partial = jnp.einsum(
+            "...k,kn->...n",
+            x.astype(jnp.float32),
+            digit.astype(jnp.float32),
+            precision=jax.lax.Precision.HIGHEST,
+        )
+        acc = acc + weight * partial
+    return (acc * qlin.scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# model-integration helper
+# ---------------------------------------------------------------------------
+
+
+def engine_dense(
+    w_or_qlin,
+    x: jnp.ndarray,
+    *,
+    engine_bits: int = 0,
+    radix: int = 1,
+    use_pallas: bool = False,
+    out_dtype=None,
+):
+    """Uniform linear application used by the serving path of every model.
+
+    If ``engine_bits == 0`` (engine disabled) ``w_or_qlin`` is a plain dense
+    matrix and this is a straight matmul (the dry-run baseline).  Otherwise
+    ``w_or_qlin`` is a :class:`QuantizedLinear` and the IMAGine engine runs.
+    """
+    if engine_bits == 0:
+        w = w_or_qlin
+        out_dtype = out_dtype or w.dtype
+        return jnp.einsum("...k,kn->...n", x, w).astype(out_dtype)
+    out_dtype = out_dtype or x.dtype
+    return gemv(w_or_qlin, x, radix=radix, use_pallas=use_pallas,
+                out_dtype=out_dtype)

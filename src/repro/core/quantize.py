@@ -1,0 +1,38 @@
+"""Symmetric per-output-channel integer quantization.
+
+The IMAGine engine stores stationary weights as b-bit signed integers
+(two's complement) — exactly what the FPGA overlay keeps in BRAM.  Scales
+are per output channel (one per PE column in paper terms).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_symmetric(w: jnp.ndarray, bits: int, axis: int = 0):
+    """Quantize ``w`` to signed ``bits``-bit integers, symmetric, per-channel.
+
+    Args:
+      w: float weight matrix.
+      bits: 2, 4 or 8.
+      axis: the *reduction* axis (input features); scales are computed over
+        it so each output channel owns one scale.
+
+    Returns:
+      (q, scale): ``q`` int8 holding values in [-(2^{b-1}-1), 2^{b-1}-1]
+      (note: the most negative code is unused, keeping the range symmetric,
+      which is what bit-serial sign handling on the overlay assumes), and
+      ``scale`` float32 broadcastable against ``w``.
+    """
+    if bits not in (2, 4, 8):
+        raise ValueError(f"bits must be 2/4/8, got {bits}")
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=axis, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -qmax, qmax)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, dtype=jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)

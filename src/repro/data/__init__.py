@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataPipeline, synthetic_batch_specs
+
+__all__ = ["DataPipeline", "synthetic_batch_specs"]

@@ -1,0 +1,154 @@
+"""Deterministic, shardable data pipeline.
+
+Production posture: each host reads only its shard of the token stream
+(``host_id``/``n_hosts``), prefetches ahead of the step loop on a background
+thread, and the stream position is part of the checkpoint so restarts are
+bit-exact.  Sources: ``synthetic`` (seeded LCG token stream — used by every
+example and test) and ``memmap`` (a binary token file).
+
+The pipeline yields the exact batch dict the model's ``forward`` expects per
+family (tokens/labels, plus stub modality inputs for vlm/audio).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+
+@dataclass
+class PipelineState:
+    step: int = 0
+
+    def to_dict(self):
+        return {"step": self.step}
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(step=int(d["step"]))
+
+
+class DataPipeline:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        batch: int,
+        seq_len: int,
+        seed: int = 0,
+        host_id: int = 0,
+        n_hosts: int = 1,
+        source: str = "synthetic",
+        path: Optional[str] = None,
+        prefetch: int = 2,
+    ):
+        assert batch % n_hosts == 0, (batch, n_hosts)
+        self.cfg = cfg
+        self.batch = batch // n_hosts      # per-host batch
+        self.seq_len = seq_len
+        self.seed = seed
+        self.host_id = host_id
+        self.n_hosts = n_hosts
+        self.state = PipelineState()
+        self._data = None
+        if source == "memmap":
+            assert path is not None
+            self._data = np.memmap(path, dtype=np.int32, mode="r")
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # ------------------------------------------------------------- batches
+    def _tokens_for_step(self, step: int) -> np.ndarray:
+        """Deterministic tokens for (step, host): restart-safe."""
+        n = self.batch * (self.seq_len + 1)
+        if self._data is not None:
+            start = (step * self.n_hosts + self.host_id) * n % max(
+                1, len(self._data) - n
+            )
+            flat = np.asarray(self._data[start : start + n])
+        else:
+            rng = np.random.default_rng(
+                (self.seed * 1_000_003 + step) * 4096 + self.host_id
+            )
+            flat = rng.integers(
+                0, self.cfg.vocab_size, size=n, dtype=np.int32
+            )
+        return flat.reshape(self.batch, self.seq_len + 1)
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        toks = self._tokens_for_step(step)
+        batch: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1],
+            "labels": toks[:, 1:],
+        }
+        if self.cfg.family == "audio":
+            k = self.cfg.n_codebooks
+            rng = np.random.default_rng(self.seed * 7 + step)
+            full = rng.integers(
+                0, self.cfg.vocab_size,
+                size=(self.batch, self.seq_len + 1, k), dtype=np.int32)
+            batch["tokens"], batch["labels"] = full[:, :-1], full[:, 1:]
+        elif self.cfg.family == "vlm":
+            rng = np.random.default_rng(self.seed * 13 + step)
+            batch["img_embeds"] = rng.standard_normal(
+                (self.batch, self.cfg.img_tokens, self.cfg.d_model)
+            ).astype(np.float32)
+        return batch
+
+    # ------------------------------------------------------------ iterator
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        return self
+
+    def __next__(self) -> Dict[str, np.ndarray]:
+        b = self.batch_at(self.state.step)
+        self.state.step += 1
+        return b
+
+    # ----------------------------------------------------------- prefetch
+    def start_prefetch(self):
+        if self._thread is not None:
+            return
+
+        def worker():
+            while not self._stop.is_set():
+                try:
+                    self._q.put(next(self), timeout=0.1)
+                except queue.Full:
+                    continue
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def get_prefetched(self, timeout: float = 10.0):
+        return self._q.get(timeout=timeout)
+
+    def stop(self):
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=1.0)
+            self._thread = None
+
+
+def synthetic_batch_specs(cfg: ModelConfig, batch: int, seq_len: int):
+    """Shape/dtype dict matching batch_at (for dry-run input_specs)."""
+    import jax.numpy as jnp
+    import jax
+
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((batch, seq_len), jnp.int32),
+    }
+    if cfg.family == "audio":
+        k = cfg.n_codebooks
+        specs["tokens"] = jax.ShapeDtypeStruct((batch, seq_len, k), jnp.int32)
+        specs["labels"] = jax.ShapeDtypeStruct((batch, seq_len, k), jnp.int32)
+    elif cfg.family == "vlm":
+        specs["img_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.img_tokens, cfg.d_model), jnp.float32)
+    return specs

@@ -1,0 +1,10 @@
+from repro.ft.failures import FailureInjector, RestartPolicy
+from repro.ft.elastic import ElasticMeshManager
+from repro.ft.straggler import StragglerMonitor
+
+__all__ = [
+    "FailureInjector",
+    "RestartPolicy",
+    "ElasticMeshManager",
+    "StragglerMonitor",
+]

@@ -1,0 +1,85 @@
+"""Elastic scaling: shrink/regrow the data-parallel extent on node loss.
+
+Shrinking strategy (standard for pod-scale runs): the ``model`` axis is
+never resized (weight shards would need re-layout); capacity loss removes
+whole data-parallel replicas — from (pod=2, data=16, model=16) to
+(pod=1, data=16, model=16) or (data=8, model=16) etc.  Because every DP
+replica holds identical params/optimizer state, resharding is a pure
+re-placement: no state is lost, only per-replica batch slices are
+re-assigned.  The global batch is preserved by raising the per-replica
+microbatch count (gradient accumulation) so optimization is bit-comparable
+before/after the shrink.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+
+from repro.config.base import MeshConfig
+
+
+@dataclass
+class ElasticPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    grad_accum_factor: int  # multiply microbatches by this to keep global batch
+
+
+class ElasticMeshManager:
+    def __init__(self, mesh_cfg: MeshConfig):
+        self.cfg = mesh_cfg
+
+    def plan_shrink(self, lost_nodes: int, chips_per_node: int = 4) -> ElasticPlan:
+        """Compute the largest valid mesh after losing ``lost_nodes``."""
+        shape = list(self.cfg.shape)
+        names = list(self.cfg.axis_names)
+        lost_chips = lost_nodes * chips_per_node
+        total = 1
+        for s in shape:
+            total *= s
+        remaining = total - lost_chips
+        if remaining <= 0:
+            raise ValueError("no capacity left")
+
+        model = shape[-1]                      # never resized
+        data_like = remaining // model
+        if data_like < 1:
+            raise ValueError("cannot keep model axis intact")
+
+        # collapse pod*data to the largest power-of-two <= data_like
+        new_data = 1 << (data_like.bit_length() - 1)
+        old_data = total // model
+        factor = old_data // new_data
+        if len(shape) == 3:
+            # fold into (data, model) if a whole pod was lost, else shrink data
+            if new_data % shape[1] == 0 and new_data // shape[1] >= 1:
+                new_shape = (new_data // shape[1], shape[1], model)
+                new_names = tuple(names)
+            else:
+                new_shape = (new_data, model)
+                new_names = (names[1], names[2])
+        else:
+            new_shape = (new_data, model)
+            new_names = tuple(names)
+        return ElasticPlan(tuple(shape), new_shape, new_names, factor)
+
+    @staticmethod
+    def reshard(tree, old_mesh, new_mesh, spec_fn):
+        """Re-place a pytree from old_mesh onto new_mesh.
+
+        With DP-only shrinkage every leaf's PartitionSpec is valid on both
+        meshes; jax.device_put handles the physical move.
+        """
+        from jax.sharding import NamedSharding
+
+        def move(path_leaf):
+            path, leaf = path_leaf
+            spec = spec_fn(path, leaf)
+            return jax.device_put(leaf, NamedSharding(new_mesh, spec))
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        return treedef.unflatten([move(pl) for pl in flat])

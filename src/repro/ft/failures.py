@@ -1,0 +1,94 @@
+"""Failure handling: injection (for drills), detection, restart policy.
+
+At 1000+ nodes, node loss is routine: the design here is the standard
+checkpoint/restart loop hardened for it —
+
+  detect (heartbeat timeout / XLA error)  ->  classify  ->  either
+  (a) restart-in-place from the latest committed checkpoint, or
+  (b) elastic shrink (repro/ft/elastic.py) when capacity is lost.
+
+This module is deliberately runnable on one CPU: ``FailureInjector``
+deterministically raises ``SimulatedNodeFailure`` inside the step loop so
+tests/drills exercise the same recovery path a real run would take.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+
+class SimulatedNodeFailure(RuntimeError):
+    def __init__(self, node_id: int, step: int):
+        super().__init__(f"node {node_id} failed at step {step}")
+        self.node_id = node_id
+        self.step = step
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule: {step: node_id}."""
+
+    schedule: dict = field(default_factory=dict)
+
+    def check(self, step: int) -> None:
+        if step in self.schedule:
+            node = self.schedule.pop(step)
+            raise SimulatedNodeFailure(node, step)
+
+
+@dataclass
+class RestartPolicy:
+    """Bounded-retry restart with exponential backoff (capped)."""
+
+    max_restarts: int = 5
+    backoff_s: float = 0.01
+    backoff_cap_s: float = 1.0
+    restarts: int = 0
+    last_failure_step: int = -1
+
+    def on_failure(self, exc: Exception, step: int) -> float:
+        """Returns backoff seconds before restart; raises if budget spent."""
+        self.restarts += 1
+        self.last_failure_step = step
+        if self.restarts > self.max_restarts:
+            raise RuntimeError(
+                f"restart budget exhausted after {self.restarts - 1} restarts"
+            ) from exc
+        return min(self.backoff_s * (2 ** (self.restarts - 1)),
+                   self.backoff_cap_s)
+
+
+def run_with_restarts(
+    step_fn: Callable[[int], None],
+    *,
+    start_step: int,
+    total_steps: int,
+    restore_fn: Callable[[], int],
+    policy: Optional[RestartPolicy] = None,
+    injector: Optional[FailureInjector] = None,
+) -> int:
+    """Drive ``step_fn`` with checkpoint/restart semantics.
+
+    ``restore_fn`` must rewind all mutable state (params/opt/data) to the
+    latest committed checkpoint and return its step.  Returns the number of
+    restarts performed.
+    """
+    policy = policy or RestartPolicy()
+    step = start_step
+    while step < total_steps:
+        try:
+            if injector is not None:
+                injector.check(step)
+            step_fn(step)
+            step += 1
+        except (SimulatedNodeFailure, RuntimeError) as exc:
+            if isinstance(exc, RuntimeError) and not isinstance(
+                exc, SimulatedNodeFailure
+            ):
+                raise
+            delay = policy.on_failure(exc, step)
+            time.sleep(delay)
+            step = restore_fn()
+    return policy.restarts

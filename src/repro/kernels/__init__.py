@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the engine's compute hot-spots.
+
+``bitplane_gemv``  — the paper's contribution: bit-serial (bit-plane) GEMV
+                     over packed b-bit weights, radix 1/2/4 per pass.
+``int8_matvec``    — bit-parallel quantized GEMV baseline (the BRAMAC-style
+                     comparison point).
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper) and ``ref.py`` (pure-jnp oracle).  Kernels target
+TPU VMEM tiling and are validated on CPU with ``interpret=True``.
+"""

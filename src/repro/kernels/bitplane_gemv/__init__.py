@@ -1,0 +1,3 @@
+from repro.kernels.bitplane_gemv.ops import bitplane_gemv
+
+__all__ = ["bitplane_gemv"]

@@ -1,0 +1,67 @@
+"""Public jit'd wrapper for the bit-plane GEMV kernel.
+
+Handles arbitrary (B, K, N): pads every axis up to block multiples (zero
+padding is exact for GEMV), dispatches the Pallas kernel, and slices the
+result back.  ``interpret=True`` runs the kernel body on CPU for validation;
+on TPU hardware pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels.bitplane_gemv.kernel import bitplane_gemv_pallas
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def bitplane_gemv(
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    bits: int = 8,
+    radix: int = 1,
+    block_b: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+
+    b, k = x2.shape
+    per_byte = 8 // bits
+    kp, n = packed.shape
+    assert kp * per_byte == k, f"packed K {kp}*{per_byte} != x K {k}"
+
+    bb = min(block_b, _round_up(b, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(k, 128))
+    b_pad, n_pad, k_pad = _round_up(b, bb), _round_up(n, bn), _round_up(k, bk)
+
+    if b_pad != b or k_pad != k:
+        x2 = jnp.pad(x2, ((0, b_pad - b), (0, k_pad - k)))
+    if k_pad != k or n_pad != n:
+        packed = jnp.pad(
+            packed, ((0, (k_pad - k) // per_byte), (0, n_pad - n))
+        )
+    if n_pad != n:
+        scale = jnp.pad(scale, ((0, 0), (0, n_pad - n)))
+
+    y = bitplane_gemv_pallas(
+        packed, scale, x2,
+        bits=bits, radix=radix,
+        block_b=bb, block_n=bn, block_k=bk,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    y = y[:b, :n].reshape(lead + (n,))
+    return y[0] if squeeze else y

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the bit-plane GEMV kernel.
+
+Walks the same radix-digit decomposition the kernel uses, so any packing,
+sign-handling or accumulation bug in the kernel shows up as a mismatch here;
+and this reference itself is validated against a plain float matmul of the
+dequantized weights in the tests.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import unpack_weights
+
+
+def bitplane_gemv_ref(
+    packed: jnp.ndarray,   # (K * bits // 8, N) int8
+    scale: jnp.ndarray,    # (1, N) f32
+    x: jnp.ndarray,        # (B, K)
+    *,
+    bits: int = 8,
+    radix: int = 1,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    q = unpack_weights(packed, bits, axis=0)            # (K, N) int8
+    code = q.astype(jnp.int32) & ((1 << bits) - 1)      # two's-complement code
+    n_digits = bits // radix
+    digit_mask = (1 << radix) - 1
+    xf = x.astype(jnp.float32)
+    acc = jnp.zeros((x.shape[0], packed.shape[1]), jnp.float32)
+    for d in range(n_digits):
+        digit = (code >> (d * radix)) & digit_mask
+        if d == n_digits - 1:
+            sign = (digit >> (radix - 1)) & 1
+            digit = digit - (sign << radix)
+        acc = acc + float(1 << (d * radix)) * jax.lax.dot_general(
+            xf, digit.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+    return (acc * scale).astype(out_dtype)

@@ -1,0 +1,129 @@
+"""Flash attention Pallas kernel (causal + sliding window, GQA).
+
+The hillclimb profile showed attention score blocks at fusion boundaries
+are the dominant HBM traffic of every dense train/prefill cell (and 18% of
+zamba2's): a fused kernel keeps scores, the running softmax statistics and
+the output accumulator in VMEM — HBM traffic collapses to Q/K/V reads + O
+writes.
+
+Grid: ``(B, Hq, nQ, nKV)`` with the KV dimension innermost; the output
+block and the (m, l) statistics blocks are revisited across the KV sweep
+(same accumulate-in-output pattern as the bitplane GEMV's east->west walk).
+GQA is expressed in the K/V BlockSpec index maps (query head h reads KV
+head ``h // group``).  Causality and the sliding window are computed from
+block indices — no mask tensors are materialized anywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *,
+            scale: float, block_q: int, block_kv: int, n_kv_blocks: int,
+            window: int):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # (bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    kv_pos = ik * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+    mask = kv_pos <= q_pos
+    if window > 0:
+        mask = jnp.logical_and(mask, kv_pos > q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[0, 0]                               # (bq,)
+    l_old = l_ref[0, 0]
+    m_blk = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_old, m_blk)
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = l_old * corr + jnp.sum(p, axis=-1)
+    o_new = o_ref[0, 0] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _final():
+        o_ref[0, 0] = o_new / jnp.maximum(l_new, 1e-30)[:, None]
+
+    @pl.when(ik < n_kv_blocks - 1)
+    def _accum():
+        o_ref[0, 0] = o_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("window", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_pallas(
+    q: jnp.ndarray,          # (B, Hq, S, D)
+    k: jnp.ndarray,          # (B, Hkv, S, D)
+    v: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    group = hq // hkv
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, s)
+    assert s % block_q == 0 and s % block_kv == 0, (s, block_q, block_kv)
+    nq, nk = s // block_q, s // block_kv
+    grid = (b, hq, nq, nk)
+    scale = d ** -0.5
+
+    out, m, l = pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, block_q=block_q, block_kv=block_kv,
+            n_kv_blocks=nk, window=window),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+            pl.BlockSpec((1, 1, block_kv, d),
+                         lambda bb, h, iq, ik: (bb, h // group, ik, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda bb, h, iq, ik: (bb, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda bb, h, iq, ik: (bb, h, iq)),
+            pl.BlockSpec((1, 1, block_q), lambda bb, h, iq, ik: (bb, h, iq)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, s), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    del m, l
+    return out.astype(q.dtype)

@@ -1,0 +1,41 @@
+"""Public wrapper for the flash-attention Pallas kernel.
+
+Accepts the model's (B, S, H, D) layout, handles non-divisible sequence
+lengths by padding (padded keys sit at +inf positions via pure causal
+masking of indices — the pad region is simply never attended because padded
+queries are sliced off and padded keys are above every real query index).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def flash_attention(
+    q: jnp.ndarray,          # (B, S, Hq, D) — model layout
+    k: jnp.ndarray,          # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    *,
+    window: int = 0,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, s, hq, d = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    blk = max(block_q, block_kv)
+    pad = (-s) % blk
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(
+        qt, kt, vt, window=window, block_q=block_q, block_kv=block_kv,
+        interpret=interpret)
+    if pad:
+        out = out[:, :, :s]
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Oracle for the flash-attention kernel: plain masked softmax attention
+in (B, H, S, D) layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0):
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, s, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    sc = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * (d ** -0.5)
+    pos = jnp.arange(s)
+    mask = pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask = jnp.logical_and(mask, pos[None, :] > pos[:, None] - window)
+    sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return out.reshape(b, hq, s, d).astype(q.dtype)

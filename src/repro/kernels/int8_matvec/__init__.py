@@ -1,0 +1,3 @@
+from repro.kernels.int8_matvec.ops import int8_matvec
+
+__all__ = ["int8_matvec"]

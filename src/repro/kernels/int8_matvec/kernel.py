@@ -1,0 +1,67 @@
+"""Bit-parallel int8 GEMV Pallas kernel — the BRAMAC-style baseline.
+
+Same weight-stationary tiling as ``bitplane_gemv`` but each weight retires
+in a single MXU pass (no bit-serial digit loop).  This is the comparison
+point the paper draws against hybrid bit-parallel designs: identical HBM
+traffic at 8-bit, fewer compute passes, no sub-byte storage option.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, scale_ref, x_ref, o_ref, *, n_k_blocks: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = q_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k_idx == n_k_blocks - 1)
+    def _finalize():
+        o_ref[...] *= scale_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_n", "block_k", "interpret", "out_dtype"),
+)
+def int8_matvec_pallas(
+    q: jnp.ndarray,        # (K, N) int8
+    scale: jnp.ndarray,    # (1, N) f32
+    x: jnp.ndarray,        # (B, K)
+    *,
+    block_b: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    b, k = x.shape
+    _, n = q.shape
+    block_b, block_n, block_k = min(block_b, b), min(block_n, n), min(block_k, k)
+    assert b % block_b == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (b // block_b, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_k, block_n), lambda bb, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda bb, j, kk: (0, j)),
+            pl.BlockSpec((block_b, block_k), lambda bb, j, kk: (bb, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_n), lambda bb, j, kk: (bb, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=interpret,
+    )(q, scale, x).astype(out_dtype)

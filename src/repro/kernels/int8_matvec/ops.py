@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for the int8 bit-parallel GEMV baseline kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.int8_matvec.kernel import int8_matvec_pallas
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def int8_matvec(
+    q: jnp.ndarray,
+    scale: jnp.ndarray,
+    x: jnp.ndarray,
+    *,
+    block_b: int = 128,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+    out_dtype=jnp.float32,
+) -> jnp.ndarray:
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None, :]
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    b, k = x2.shape
+    _, n = q.shape
+
+    bb = min(block_b, _round_up(b, 8))
+    bn = min(block_n, _round_up(n, 128))
+    bk = min(block_k, _round_up(k, 128))
+    b_pad, n_pad, k_pad = _round_up(b, bb), _round_up(n, bn), _round_up(k, bk)
+    if b_pad != b or k_pad != k:
+        x2 = jnp.pad(x2, ((0, b_pad - b), (0, k_pad - k)))
+    if k_pad != k or n_pad != n:
+        q = jnp.pad(q, ((0, k_pad - k), (0, n_pad - n)))
+    if n_pad != n:
+        scale = jnp.pad(scale, ((0, 0), (0, n_pad - n)))
+
+    y = int8_matvec_pallas(
+        q, scale, x2, block_b=bb, block_n=bn, block_k=bk,
+        interpret=interpret, out_dtype=out_dtype,
+    )
+    y = y[:b, :n].reshape(lead + (n,))
+    return y[0] if squeeze else y

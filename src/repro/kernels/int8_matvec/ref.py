@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the int8 bit-parallel GEMV kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_matvec_ref(q, scale, x, *, out_dtype=jnp.float32):
+    acc = jax.lax.dot_general(
+        x.astype(jnp.float32),
+        q.astype(jnp.float32),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    return (acc * scale).astype(out_dtype)

@@ -1,0 +1,17 @@
+"""Public wrapper for the SSD Pallas kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+
+
+def ssd_scan(xdt, la, b_in, c_in, *, chunk: int = 128, interpret: bool = True):
+    """y, h_final = SSD(xdt, exp(la), B, C) — kernel entry point.
+
+    xdt: (B, S, H, P) dt-premultiplied head inputs; la: (B, S, H) log decay;
+    b_in/c_in: (B, S, N) state projections.
+    """
+    return ssd_scan_pallas(xdt, la, b_in, c_in, chunk=chunk,
+                           interpret=interpret)

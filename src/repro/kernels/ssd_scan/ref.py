@@ -1,0 +1,25 @@
+"""Oracle for the SSD kernel: repro.models.ssm.ssd_chunked re-parameterized
+to the kernel's (pre-discretized) inputs."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def ssd_scan_ref(xdt, la, b_in, c_in, chunk: int = 128):
+    """Naive per-step recurrence on the kernel's inputs (exact)."""
+    bsz, s, nh, p = xdt.shape
+    n = b_in.shape[-1]
+    h = np.zeros((bsz, nh, p, n))
+    ys = []
+    xdt = np.asarray(xdt, np.float64)
+    la = np.asarray(la, np.float64)
+    b_in = np.asarray(b_in, np.float64)
+    c_in = np.asarray(c_in, np.float64)
+    for t in range(s):
+        decay = np.exp(la[:, t])                       # (B, H)
+        h = h * decay[:, :, None, None] + np.einsum(
+            "bhp,bn->bhpn", xdt[:, t], b_in[:, t])
+        ys.append(np.einsum("bn,bhpn->bhp", c_in[:, t], h))
+    return np.stack(ys, 1), h

@@ -1,0 +1,165 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run driver.
+
+For one (arch x shape x mesh) cell: build the abstract sharded state, lower
+and compile the cell's step function on the production mesh, print
+``memory_analysis()`` and ``cost_analysis()``, derive the three roofline
+terms, and append the record to a JSON results file.
+
+The two lines above run before ANY other import (jax locks the device count
+at first init): the dry-run — and only the dry-run — sees 512 host devices.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+      --shape train_4k [--multi-pod] [--engine-bits 8] [--split-local] \
+      [--out experiments/dryrun]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             engine_bits: int = 0, engine_radix: int = 1, kv_bits: int = 0,
+             split_local: bool = False, remat: str = "block",
+             microbatches: int = 1, grad_compress_bits: int = 0,
+             out_dir: str = "experiments/dryrun", tag: str = "") -> dict:
+    import numpy as np
+
+    from repro.config import SHAPES, get_arch
+    from repro.config.base import (EngineConfig, MeshConfig, RunConfig,
+                                   ServeConfig, TrainConfig)
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+    from repro.roofline.analysis import (model_bytes_for_cell,
+                                         model_flops_for_cell,
+                                         roofline_report)
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        raise SystemExit(
+            f"{arch} is pure full-attention: long_500k is skipped by design "
+            "(see DESIGN.md §Arch-applicability)")
+
+    eng = EngineConfig(weight_bits=engine_bits, radix=engine_radix,
+                       kv_bits=kv_bits, use_pallas=False)
+    run = RunConfig(
+        model=cfg,
+        shape=shape,
+        mesh=MeshConfig(multi_pod=multi_pod),
+        train=TrainConfig(remat=remat, microbatches=microbatches,
+                          grad_compress_bits=grad_compress_bits),
+        serve=ServeConfig(engine=eng),
+    )
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    kw = {"split_local": split_local} if shape.kind == "decode" else {}
+
+    t0 = time.time()
+    with jax.sharding.set_mesh(mesh):
+        fn, args, kind = build_cell(run, mesh, **kw)
+        lowered = fn.lower(*args)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+
+    print(f"=== {arch} x {shape_name} on {mesh.shape} ({kind}) ===")
+    try:
+        print(compiled.memory_analysis())
+    except Exception as e:
+        print(f"memory_analysis unavailable: {e}")
+    cost = compiled.cost_analysis()
+    flops = cost.get("flops") if isinstance(cost, dict) else None
+    print({k: v for k, v in (cost.items() if isinstance(cost, dict) else [])
+           if k in ("flops", "bytes accessed", "transcendentals")})
+
+    cache_bytes = 0.0
+    if kind in ("decode", "prefill"):
+        cache_abs = args[2] if kind == "prefill" else args[1]
+        cache_bytes = float(sum(
+            np.prod(l.shape) * l.dtype.itemsize
+            for k, sub in cache_abs.items() if k != "pos"
+            for l in jax.tree.leaves(sub)))
+    report = roofline_report(
+        compiled, n_dev,
+        model_flops=model_flops_for_cell(cfg, shape),
+        model_bytes=model_bytes_for_cell(cfg, shape, engine_bits,
+                                         cache_bytes))
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": list(mesh.shape.values()) if hasattr(mesh.shape, "values")
+                else list(mesh.shape),
+        "multi_pod": multi_pod,
+        "kind": kind,
+        "engine_bits": engine_bits,
+        "engine_radix": engine_radix,
+        "split_local": split_local,
+        "remat": remat,
+        "microbatches": microbatches,
+        "grad_compress_bits": grad_compress_bits,
+        "tag": tag,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        **report,
+    }
+    del flops
+
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "multipod" if multi_pod else "pod"
+    name = f"{arch}__{shape_name}__{suffix}"
+    if engine_bits:
+        name += f"__eng{engine_bits}r{engine_radix}"
+    if split_local:
+        name += "__splitlocal"
+    if tag:
+        name += f"__{tag}"
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, default=float)
+    print(f"terms: compute={report['compute_s']:.4e}s "
+          f"memory={report['memory_s']:.4e}s "
+          f"collective={report['collective_s']:.4e}s "
+          f"dominant={report['dominant']} "
+          f"roofline_fraction={report.get('roofline_fraction', 0):.3f}")
+    print(f"wrote {path}")
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=[
+        "train_4k", "prefill_32k", "decode_32k", "long_500k"])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--engine-bits", type=int, default=0)
+    ap.add_argument("--engine-radix", type=int, default=1)
+    ap.add_argument("--split-local", action="store_true")
+    ap.add_argument("--remat", default="block")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--grad-compress-bits", type=int, default=0)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+             engine_bits=args.engine_bits, engine_radix=args.engine_radix,
+             split_local=args.split_local, remat=args.remat,
+             microbatches=args.microbatches,
+             grad_compress_bits=args.grad_compress_bits,
+             out_dir=args.out, tag=args.tag)
+
+
+if __name__ == "__main__":
+    main()

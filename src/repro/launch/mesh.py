@@ -1,0 +1,35 @@
+"""Production mesh geometry.
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module touches no jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first jax
+init and then calls it.
+
+Single pod: (data=16, model=16) = 256 chips (one TPU v5e pod slice).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+data parallelism by default (gradient all-reduce over DCI) and can be
+switched to pipeline parallelism in config.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    n = len(jax.devices())
+    data = min(data, n)
+    model = min(model, max(1, n // data))
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,149 @@
+"""Per-cell step builders: abstract (no-allocation) state + the jitted step
+function each (arch x shape) dry-run cell lowers.
+
+  train_4k              -> train_step (forward + backward + AdamW)
+  prefill_32k           -> prefill    (forward + KV/state cache write)
+  decode_32k / long_500k -> serve_step (one token against a seq_len cache)
+
+All state is ``jax.ShapeDtypeStruct`` with ``NamedSharding`` attached — the
+dry-run never allocates a parameter.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import EngineConfig, ModelConfig, RunConfig, ShapeConfig
+from repro.data.pipeline import synthetic_batch_specs
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.models import decode_step, init_cache, init_params
+from repro.models.transformer import prefill, quantize_params
+from repro.optim import make_optimizer
+from repro.train.trainer import make_train_step
+
+Pytree = Any
+
+
+def _attach(tree: Pytree, shardings: Pytree) -> Pytree:
+    return jax.tree.map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        tree, shardings,
+    )
+
+
+def abstract_params(cfg: ModelConfig, engine_bits: int = 0) -> Pytree:
+    out = jax.eval_shape(functools.partial(init_params, cfg),
+                         jax.random.PRNGKey(0))
+    if engine_bits:
+        out = jax.eval_shape(
+            functools.partial(quantize_params, cfg=cfg, bits=engine_bits), out)
+    return out
+
+
+def sharded_abstract_params(cfg: ModelConfig, mesh, engine_bits: int = 0):
+    ap = abstract_params(cfg, engine_bits)
+    return _attach(ap, param_shardings(mesh, ap))
+
+
+def train_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
+    """Returns (jitted_fn, abstract_args) for a training cell."""
+    cfg, shape, tcfg = run.model, run.shape, run.train
+    ap = abstract_params(cfg)
+    # training params/optimizer are fully sharded (ZeRO/FSDP over the data
+    # axes on top of TP) — 100B+ configs cannot fit TP-only state.
+    ap_sh = _attach(ap, param_shardings(mesh, ap, mode="fsdp"))
+
+    init_fn, _ = make_optimizer(tcfg.optimizer)
+    aopt = jax.eval_shape(init_fn, ap)
+    aopt_sh = _attach(aopt, opt_state_shardings(mesh, aopt, mode="fsdp"))
+
+    if tcfg.grad_compress_bits:
+        from repro.optim import ef_state_init
+
+        aef = jax.eval_shape(ef_state_init, ap)
+        aef_sh = _attach(aef, opt_state_shardings(mesh, aef, mode="fsdp"))
+    else:
+        aef_sh = {}
+
+    text_seq = (shape.seq_len - cfg.img_tokens if cfg.family == "vlm"
+                else shape.seq_len)
+    abatch = synthetic_batch_specs(cfg, shape.global_batch, text_seq)
+    abatch_sh = _attach(abatch, batch_shardings(mesh, abatch))
+
+    fn = make_train_step(cfg, tcfg, donate=True)
+    return fn, (ap_sh, aopt_sh, aef_sh, abatch_sh)
+
+
+def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
+    cfg, shape = run.model, run.shape
+    eng = run.serve.engine if run.serve.engine.enabled else None
+    bits = eng.weight_bits if eng else 0
+    ap_sh = sharded_abstract_params(cfg, mesh, bits)
+
+    seq = shape.seq_len
+    text_seq = seq - cfg.img_tokens if cfg.family == "vlm" else seq
+    abatch = synthetic_batch_specs(cfg, shape.global_batch, text_seq)
+    abatch.pop("labels")
+    abatch_sh = _attach(abatch, batch_shardings(mesh, abatch))
+
+    acache = jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, seq))
+    acache_sh = _attach(acache, cache_shardings(mesh, acache))
+
+    fn = jax.jit(
+        lambda params, batch, cache: prefill(params, batch, cfg, cache, eng),
+        donate_argnums=(2,),
+    )
+    return fn, (ap_sh, abatch_sh, acache_sh)
+
+
+def serve_cell(run: RunConfig, mesh, split_local: bool = False,
+               stacked: bool = False) -> Tuple[Any, Tuple]:
+    """Decode cells default to the unstacked per-layer cache layout (no
+    stacked scan carry — the production decode graph)."""
+    cfg, shape = run.model, run.shape
+    eng = run.serve.engine if run.serve.engine.enabled else None
+    bits = eng.weight_bits if eng else 0
+    ap_sh = sharded_abstract_params(cfg, mesh, bits)
+
+    kv_bits = eng.kv_bits if eng else 0
+    acache = jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len,
+                          split_local=split_local, stacked=stacked,
+                          kv_bits=kv_bits))
+    acache_sh = _attach(acache, cache_shardings(mesh, acache))
+
+    tok_shape = ((shape.global_batch, 1, cfg.n_codebooks)
+                 if cfg.family == "audio" else (shape.global_batch, 1))
+    atoks = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    atoks_sh = _attach(atoks, batch_shardings(mesh, atoks))["tokens"]
+
+    fn = jax.jit(
+        lambda params, cache, tokens: decode_step(params, cache, tokens, cfg,
+                                                  eng),
+        donate_argnums=(1,),
+    )
+    return fn, (ap_sh, acache_sh, atoks_sh)
+
+
+def build_cell(run: RunConfig, mesh, **kw) -> Tuple[Any, Tuple, str]:
+    """(fn, abstract_args, kind) for the run's shape cell."""
+    kind = run.shape.kind
+    if kind == "train":
+        fn, args = train_cell(run, mesh)
+    elif kind == "prefill":
+        fn, args = prefill_cell(run, mesh)
+    elif kind == "decode":
+        fn, args = serve_cell(run, mesh, **kw)
+    else:
+        raise ValueError(kind)
+    return fn, args, kind

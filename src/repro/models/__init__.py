@@ -1,0 +1,25 @@
+"""Model zoo: a generic decoder-family LM covering all 10 assigned archs.
+
+Families: dense (gemma3 / mistral-large / starcoder2 / qwen2.5), vlm (llava),
+audio (musicgen), moe (llama4-scout / qwen3-moe), ssm (mamba2), hybrid
+(zamba2).  All built from the same functional blocks with scan-over-layers
+so HLO size is O(1) in depth.
+"""
+
+from repro.models.transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    quantize_params,
+)
+
+__all__ = [
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_params",
+    "loss_fn",
+    "quantize_params",
+]

@@ -1,0 +1,130 @@
+"""Shared building blocks: norms, RoPE, linears (dense or IMAGine-engine),
+SwiGLU MLP, embeddings.
+
+Every matmul in the zoo goes through :func:`dense`, which dispatches between
+a plain matrix and the engine's packed-quantized format — this is how the
+paper's GEMV engine becomes a first-class, model-agnostic serving feature.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import EngineConfig
+from repro.core.bitplane import unpack_weights
+
+
+# ---------------------------------------------------------------------------
+# linear: plain or engine-quantized
+# ---------------------------------------------------------------------------
+
+
+def is_quantized(p) -> bool:
+    return isinstance(p, dict) and "packed" in p
+
+
+def engine_apply(p: dict, x: jnp.ndarray, eng: Optional[EngineConfig]) -> jnp.ndarray:
+    """IMAGine engine forward for a packed linear param dict.
+
+    jnp path (always valid, used for CPU + dry-run lowering); the Pallas
+    kernel path is taken for 2D weights when requested.  Bytes read from
+    "HBM" are ``bits/8`` per weight either way — the roofline-relevant
+    property of the engine.
+    """
+    bits = int(p.get("bits", eng.weight_bits if eng else 8))
+    packed, scale = p["packed"], p["scale"]
+    if eng is not None and eng.use_pallas and packed.ndim == 2 and x.ndim <= 2:
+        from repro.kernels.bitplane_gemv.ops import bitplane_gemv
+
+        return bitplane_gemv(
+            packed, scale, x, bits=bits, radix=eng.radix,
+            interpret=True, out_dtype=x.dtype,
+        )
+    w = unpack_weights(packed, bits, axis=-2).astype(jnp.float32)
+    y = jnp.matmul(x.astype(jnp.float32), w) * scale
+    return y.astype(x.dtype)
+
+
+def dense(p, x: jnp.ndarray, eng: Optional[EngineConfig] = None) -> jnp.ndarray:
+    """y = x @ W with optional bias; W may be engine-packed."""
+    if is_quantized(p):
+        bias = p.get("bias")
+        y = engine_apply(p, x, eng)
+    else:
+        if isinstance(p, dict):
+            w, bias = p["w"], p.get("bias")
+        else:
+            w, bias = p, None
+        y = jnp.matmul(x, w.astype(x.dtype))
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_gated(x: jnp.ndarray, z: jnp.ndarray, scale: jnp.ndarray,
+                   eps: float = 1e-6) -> jnp.ndarray:
+    """Mamba2's gated RMSNorm: norm(x) * silu(z)."""
+    return rms_norm(x, scale, eps) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+
+
+def swiglu(p: dict, x: jnp.ndarray, eng: Optional[EngineConfig] = None) -> jnp.ndarray:
+    if "w_gate" not in p:  # plain GELU MLP (starcoder2-style)
+        return dense(p["w_down"], jax.nn.gelu(dense(p["w_up"], x, eng)), eng)
+    gate = dense(p["w_gate"], x, eng)
+    up = dense(p["w_up"], x, eng)
+    return dense(p["w_down"], jax.nn.silu(gate) * up, eng)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                        # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,Dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False,
+                scale: float = 1.0):
+    std = scale / (d_in ** 0.5)
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+    if bias:
+        return {"w": w, "bias": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def init_embedding(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)

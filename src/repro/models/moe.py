@@ -1,0 +1,161 @@
+"""Mixture-of-Experts block: token-choice top-k routing with capacity,
+sort-based static-shape dispatch, expert-parallel sharding over the
+``model`` mesh axis.
+
+Covers llama4-scout (16e top-1 + shared expert) and qwen3-moe (128e top-8).
+The dispatch buffer is (E, C, D) with C = ceil(T·k/E · capacity_factor);
+tokens over capacity are dropped (standard token-choice semantics).  The
+(E, ...) leading axis is the EP axis — XLA lowers the scatter/gather across
+it to all-to-all collectives, which the roofline collective term measures.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import EngineConfig, ModelConfig
+from repro.dist.hints import shard_experts, with_hint
+from repro.models.layers import dense, engine_apply, init_linear, is_quantized, swiglu
+
+# EP dispatch mode.  "a2a" (default) pins the dispatch buffer's sharding on
+# both sides of the expert exchange so GSPMD lowers it to compact
+# all-to-alls and the combine gather/scatter stay row-local.  "gspmd"
+# leaves placement to propagation — kept for the §Perf baseline: it lets
+# GSPMD materialize the combine as full-tensor all-reduces (measured 39x
+# worse on qwen3-moe train_4k).
+EP_DISPATCH = "a2a"
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std = 1.0 / (d ** 0.5)
+    params = {
+        "router": init_linear(ks[0], d, e, dtype),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32) * std).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32) * std).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32) * std).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.d_ff
+        params["shared"] = {
+            "w_gate": init_linear(jax.random.fold_in(ks[4], 1), d, fs, dtype),
+            "w_up": init_linear(jax.random.fold_in(ks[4], 2), d, fs, dtype),
+            "w_down": init_linear(jax.random.fold_in(ks[4], 3), fs, d, dtype),
+        }
+    return params
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(-(-n_tokens * cfg.top_k * cfg.capacity_factor // cfg.n_experts))
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def _scoped(name):
+    import functools
+
+    def wrap(fn):
+        @functools.wraps(fn)
+        def inner(*a, **k):
+            with jax.named_scope(name):
+                return fn(*a, **k)
+        return inner
+    return wrap
+
+
+@_scoped("moe_block")
+def moe_block(
+    params,
+    x: jnp.ndarray,                 # (B, S, D) — or (T, D), treated as B=1
+    cfg: ModelConfig,
+    eng: Optional[EngineConfig] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y, aux_loss).
+
+    GROUP-WISE token-choice routing (GShard/Switch style): each sequence
+    (batch row) routes its own tokens with a per-group capacity.  All
+    sort/rank/scatter work happens along the row axis, which is sharded
+    over the data axes — so dispatch is communication-free and the only
+    collective is the (data <-> model) resharding of the (B, E, C, D)
+    dispatch buffer, which XLA lowers to an all-to-all: exactly the EP
+    pattern the roofline's collective term should see.
+    """
+    squeeze = x.ndim == 2
+    if squeeze:
+        x = x[None]
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    c = _capacity(s, cfg)
+
+    logits = with_hint(dense(params["router"], x).astype(jnp.float32),
+                       ("pod", "data"), None, None)           # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                    # (B, S, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balancing auxiliary loss (Switch-style) ----------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_i[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac_tokens * mean_probs) * cfg.router_aux_coef
+
+    # ---- per-row sort-based dispatch (static shapes, no cross-row comm) ----
+    flat_e = top_i.reshape(b, s * k)
+    flat_g = top_p.reshape(b, s * k)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)    # (B, S*k)
+    # segment starts per row: first index of each expert id in the sorted row
+    starts = jax.vmap(
+        lambda row: jnp.searchsorted(row, jnp.arange(e)))(sorted_e)  # (B, E)
+    rank = (jnp.arange(s * k)[None, :]
+            - jnp.take_along_axis(starts, sorted_e, axis=-1))
+    keep = rank < c
+    dst = jnp.where(keep, sorted_e * c + rank, e * c)         # overflow slot
+    src_tok = order // k                                      # (B, S*k)
+
+    rows = jnp.arange(b)[:, None]
+    xsrc = jnp.take_along_axis(x, src_tok[..., None], axis=1)  # (B, S*k, D)
+    buf = jnp.zeros((b, e * c + 1, d), x.dtype).at[rows, dst].set(
+        jnp.where(keep[..., None], xsrc, 0))
+    buf = buf[:, : e * c].reshape(b, e, c, d)
+
+    # ---- expert compute (batched einsum over the EP axis) -------------------
+    def _apply(p, h):
+        if is_quantized(p):
+            return engine_apply(p, h, eng)
+        return jnp.matmul(h, p.astype(h.dtype))  # (B,E,C,·) @ (E,·,·)
+
+    def expert_ff(h):
+        gate = _apply(params["w_gate"], h)
+        up = _apply(params["w_up"], h)
+        return _apply(params["w_down"], jax.nn.silu(gate) * up)
+
+    if EP_DISPATCH == "a2a":
+        # pin the exchange: rows-sharded (local scatter result) -> experts-
+        # sharded (one all-to-all, bf16 wire) -> compute -> back to rows-
+        # sharded (one all-to-all) so the combine below is communication-free.
+        buf = with_hint(buf.astype(x.dtype), None, "model", None, None)
+        out4 = expert_ff(buf).astype(x.dtype)
+        out4 = with_hint(out4, ("pod", "data"), None, None, None)
+    else:
+        buf = shard_experts(buf)
+        out4 = shard_experts(expert_ff(buf))
+    out_buf = out4.reshape(b, e * c, d)
+    out_buf = jnp.concatenate(
+        [out_buf, jnp.zeros((b, 1, d), x.dtype)], axis=1)
+
+    # ---- combine (row-local: out_buf and x share row sharding) --------------
+    gathered = jnp.take_along_axis(out_buf, dst[..., None], axis=1)
+    gathered = gathered * (jnp.take_along_axis(flat_g, order, axis=-1)
+                           * keep)[..., None].astype(x.dtype)
+    y = jnp.zeros((b, s, d), x.dtype).at[rows, src_tok].add(gathered)
+    y = with_hint(y, ("pod", "data"), None, None)
+
+    if "shared" in params:
+        y = y + swiglu(params["shared"], x, eng)
+    if squeeze:
+        y = y[0]
+    return y, aux

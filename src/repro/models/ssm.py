@@ -1,0 +1,229 @@
+"""Mamba2 (SSD — state-space duality) block, chunked-scan training path and
+O(1)-state decode path.
+
+Follows arXiv:2405.21060: per-head scalar decay A, state size ``ssm_state``,
+heads of width ``ssm_head_dim``; the SSD algorithm splits the sequence into
+chunks — within-chunk terms computed as masked (attention-like) matmuls,
+cross-chunk terms carried by a ``lax.scan`` over per-chunk states.  Decode
+is the exact recurrence h' = a·h + dt·x⊗B, y = C·h' + D·x.
+
+The training path memory is O(B · S · (heads·hd + state)) — no S^2 blocks —
+so the 500k-token cell is compile-feasible; state is the only cache.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import EngineConfig, ModelConfig
+from repro.models.layers import dense, init_linear, rms_norm_gated
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d, di, st = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, cw = cfg.n_ssm_heads, cfg.conv_width
+    ks = jax.random.split(key, 4)
+    conv_ch = di + 2 * st
+    return {
+        # order: [z (di), x (di), B (st), C (st), dt (nh)]
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * st + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cw, conv_ch), jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((nh,), jnp.float32),      # A = -exp(a_log) = -1
+        "dt_bias": jnp.full((nh,), -2.0, jnp.float32),  # softplus ~= 0.12
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": init_linear(ks[2], di, d, dtype),
+    }
+
+
+def _split_proj(zxbcdt: jnp.ndarray, cfg: ModelConfig):
+    di, st, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xs = zxbcdt[..., di : 2 * di]
+    b_in = zxbcdt[..., 2 * di : 2 * di + st]
+    c_in = zxbcdt[..., 2 * di + st : 2 * di + 2 * st]
+    dt = zxbcdt[..., 2 * di + 2 * st :]
+    return z, xs, b_in, c_in, dt
+
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S.  u: (B,S,C); w: (cw,C).
+
+    Returns (out, new_state) where state is the last (cw-1) inputs.
+    """
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(u.shape[:1] + (cw - 1,) + u.shape[2:], u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)               # (B, S+cw-1, C)
+    out = sum(
+        full[:, i : i + u.shape[1]] * w[i][None, None] for i in range(cw)
+    ) + b[None, None]
+    new_state = full[:, -(cw - 1) :] if cw > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_state
+
+
+def _scoped(name):
+    import functools
+
+    def wrap(fn):
+        @functools.wraps(fn)
+        def inner(*a, **k):
+            with jax.named_scope(name):
+                return fn(*a, **k)
+        return inner
+    return wrap
+
+
+@_scoped("ssd_chunked")
+def ssd_chunked(
+    xh: jnp.ndarray,      # (B, S, H, P)  inputs per head
+    dt: jnp.ndarray,      # (B, S, H)     softplus'd timestep
+    a: jnp.ndarray,       # (H,)          negative decay rate (A = -exp(a_log))
+    b_in: jnp.ndarray,    # (B, S, N)     input projection B
+    c_in: jnp.ndarray,    # (B, S, N)     output projection C
+    chunk: int,
+    h0: Optional[jnp.ndarray] = None,     # (B, H, P, N) initial state
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD chunked algorithm.  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    bsz, s, nh, p = xh.shape
+    n = b_in.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    # running decay statistics stay f32 (cumsum / exp numerics); the BIG
+    # tensors (decay mask, inputs, GB kernel) live in the model dtype with
+    # f32 matmul accumulation — the hillclimb-C memory optimization.
+    cdt = xh.dtype
+    la = dt * a[None, None, :]                      # log decay (B,S,H), <= 0
+    xdt = (xh.astype(jnp.float32) * dt[..., None]).astype(cdt)
+
+    lac = la.reshape(bsz, nc, chunk, nh)
+    cum = jnp.cumsum(lac, axis=2)                   # within-chunk cumulative
+    total = cum[:, :, -1]                           # (B,nc,H) chunk log-decay
+
+    xc = xdt.reshape(bsz, nc, chunk, nh, p)
+    bc = b_in.reshape(bsz, nc, chunk, n).astype(cdt)
+    cc = c_in.reshape(bsz, nc, chunk, n).astype(cdt)
+
+    # ---- intra-chunk (diagonal blocks): attention-like masked matmul -------
+    # M[i,j] = C_i·B_j * exp(cum_i - cum_j)  for j <= i.  The (L,L,H) decay
+    # tensor is the SSD memory hot-spot, so heads are processed in groups of
+    # <= 8 under a scan to bound live memory at O(B·nc·L·L·8).
+    gb = jnp.einsum("bcin,bcjn->bcij", cc, bc,
+                    preferred_element_type=jnp.float32).astype(cdt)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    hg = min(8, nh)
+    assert nh % hg == 0, (nh, hg)
+    cum_g = cum.reshape(bsz, nc, chunk, nh // hg, hg).transpose(3, 0, 1, 2, 4)
+    xc_g = xc.reshape(bsz, nc, chunk, nh // hg, hg, p).transpose(3, 0, 1, 2, 4, 5)
+
+    def head_group(_, inp):
+        cum_i, xc_i = inp                            # (B,nc,L,hg), (B,nc,L,hg,P)
+        dec = cum_i[:, :, :, None, :] - cum_i[:, :, None, :, :]
+        m = jnp.where(causal[None, None, :, :, None], jnp.exp(dec), 0.0)
+        y_g = jnp.einsum("bcij,bcijh,bcjhp->bcihp", gb, m.astype(cdt), xc_i,
+                         preferred_element_type=jnp.float32)
+        return None, y_g
+
+    _, y_groups = jax.lax.scan(head_group, None, (cum_g, xc_g))
+    y_intra = y_groups.transpose(1, 2, 3, 0, 4, 5).reshape(
+        bsz, nc, chunk, nh, p
+    )
+
+    # ---- chunk states: what each chunk contributes to the carried state ----
+    # state_c = sum_j exp(total - cum_j) * B_j ⊗ x_j
+    decay_to_end = jnp.exp(total[:, :, None] - cum).astype(cdt)  # (B,nc,L,H)
+    chunk_state = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", bc, decay_to_end, xc,
+                             preferred_element_type=jnp.float32)
+
+    # ---- inter-chunk scan over carried state --------------------------------
+    h_init = (jnp.zeros((bsz, nh, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def step(h, inp):
+        ch_state, ch_total = inp                           # (B,H,P,N), (B,H)
+        h_out = h                                          # state entering chunk
+        h_next = h * jnp.exp(ch_total)[:, :, None, None] + ch_state
+        return h_next, h_out
+
+    h_final, h_enter = jax.lax.scan(
+        step, h_init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)),
+    )
+    h_enter = h_enter.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    # ---- inter-chunk contribution to outputs --------------------------------
+    y_inter = jnp.einsum(
+        "bcin,bcih,bchpn->bcihp", cc, jnp.exp(cum).astype(cdt),
+        h_enter.astype(cdt), preferred_element_type=jnp.float32
+    )
+    y = (y_intra + y_inter).reshape(bsz, s, nh, p)
+    return y.astype(xh.dtype), h_final
+
+
+def ssm_forward(
+    params,
+    x: jnp.ndarray,                     # (B, S, D)
+    cfg: ModelConfig,
+    eng: Optional[EngineConfig] = None,
+) -> jnp.ndarray:
+    """Training/prefill path (no cache)."""
+    y, _, _ = _ssm_run(params, x, cfg, eng, conv_state=None, h0=None)
+    return y
+
+
+def ssm_decode_step(params, x, cfg, conv_state, h,
+                    eng: Optional[EngineConfig] = None):
+    """x: (B, 1, D).  Exact recurrence; returns (y, conv_state, h)."""
+    return _ssm_run(params, x, cfg, eng, conv_state=conv_state, h0=h,
+                    decode=True)
+
+
+@_scoped("_ssm_run")
+def _ssm_run(params, x, cfg, eng, conv_state, h0, decode: bool = False):
+    bsz, s, _ = x.shape
+    nh, p, st = cfg.n_ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    zxbcdt = dense(params["in_proj"], x, eng)
+    z, xs, b_in, c_in, dt = _split_proj(zxbcdt, cfg)
+
+    conv_in = jnp.concatenate([xs, b_in, c_in], axis=-1)
+    conv_out, new_conv_state = _causal_conv(
+        conv_in, params["conv_w"], params["conv_b"], conv_state
+    )
+    di = cfg.d_inner
+    xs = conv_out[..., :di]
+    b_in = conv_out[..., di : di + st]
+    c_in = conv_out[..., di + st :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                     # (H,)
+    xh = xs.reshape(bsz, s, nh, p)
+
+    if decode:
+        # h' = exp(dt·a)·h + dt·x ⊗ B ;  y = C·h' + D·x
+        la = jnp.exp(dt[:, 0] * a[None])                  # (B,H)
+        xdt = xh[:, 0] * dt[:, 0, :, None]                # (B,H,P)
+        h = (h0.astype(jnp.float32) * la[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xdt, b_in[:, 0].astype(jnp.float32)))
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32), h)
+        y = y[:, None] + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        h_final = h
+    else:
+        y, h_final = ssd_chunked(
+            xh, dt, a, b_in, c_in, cfg.ssm_chunk, h0
+        )
+        y = y.astype(jnp.float32) + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm_gated(y, z, params["norm_scale"], cfg.norm_eps)
+    out = dense(params["out_proj"], y, eng)
+    return out, new_conv_state, h_final

@@ -1,0 +1,31 @@
+from repro.optim.optimizers import (
+    OptState,
+    adafactor_init,
+    adafactor_update,
+    adamw_init,
+    adamw_update,
+    make_optimizer,
+    sgd_init,
+    sgd_update,
+)
+from repro.optim.schedule import cosine_warmup
+from repro.optim.grad_compress import (
+    compress_decompress,
+    ef_state_init,
+    error_feedback_compress,
+)
+
+__all__ = [
+    "OptState",
+    "adamw_init",
+    "adamw_update",
+    "adafactor_init",
+    "adafactor_update",
+    "sgd_init",
+    "sgd_update",
+    "make_optimizer",
+    "cosine_warmup",
+    "compress_decompress",
+    "ef_state_init",
+    "error_feedback_compress",
+]

@@ -1,0 +1,53 @@
+"""Int8 error-feedback gradient compression for cross-pod all-reduce.
+
+At 512+ chips the cross-pod gradient all-reduce is the dominant collective
+for data-parallel training.  Compressing gradients to int8 before the
+``pod``-axis psum cuts those bytes 4x (bf16->int8 ... 2x; fp32->int8 ... 4x);
+the quantization error is carried in an error-feedback buffer so the
+*accumulated* update stays unbiased (Karimireddy et al., 2019 — SignSGD-EF
+family).
+
+Implementation notes: the compress -> psum -> decompress sequence lives
+inside ``shard_map`` over the pod axis (see repro/dist/collectives.py); the
+scale is the per-leaf absmax, itself psum-maxed so every pod uses the same
+dequantization scale.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+def ef_state_init(grads: Pytree) -> Pytree:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_decompress(g: jnp.ndarray, bits: int = 8) -> jnp.ndarray:
+    """Quantize/dequantize roundtrip (what the wire would carry)."""
+    qmax = 2 ** (bits - 1) - 1
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.where(absmax > 0, absmax / qmax, 1.0)
+    q = jnp.clip(jnp.round(g / scale), -qmax, qmax).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_compress(
+    grads: Pytree, ef: Pytree, bits: int = 8
+) -> Tuple[Pytree, Pytree]:
+    """Returns (compressed_grads, new_ef).  compressed + ef' == grads + ef."""
+
+    def one(g, e):
+        target = g.astype(jnp.float32) + e
+        sent = compress_decompress(target, bits)
+        return sent, target - sent
+
+    out = jax.tree.map(one, grads, ef)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    sent = treedef.unflatten([l[0] for l in leaves])
+    new_ef = treedef.unflatten([l[1] for l in leaves])
+    return sent, new_ef

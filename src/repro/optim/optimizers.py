@@ -1,0 +1,156 @@
+"""Optimizers, written against plain pytrees (no optax dependency).
+
+AdamW keeps fp32 moments regardless of param dtype (the standard bf16-param
++ fp32-state large-model recipe); Adafactor offers the memory-lean
+alternative (factored second moment) for the 100B+ configs; SGD exists as
+the trivial baseline and for tests.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import TrainConfig
+
+Pytree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    inner: Pytree
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: Pytree) -> OptState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        inner={"m": jax.tree.map(zeros, params),
+               "v": jax.tree.map(zeros, params)},
+    )
+
+
+def adamw_update(grads: Pytree, state: OptState, params: Pytree,
+                 cfg: TrainConfig, lr: jnp.ndarray) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    b1, b2, eps = cfg.beta1, cfg.beta2, cfg.eps
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / c1, v / c2
+        delta = mh / (jnp.sqrt(vh) + eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.inner["m"], state.inner["v"])
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    new_v = treedef.unflatten([l[2] for l in leaves])
+    return new_p, OptState(step, {"m": new_m, "v": new_v})
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory-lean for 100B+ params)
+# ---------------------------------------------------------------------------
+
+
+def adafactor_init(params: Pytree) -> OptState:
+    def make(p):
+        if p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        inner=jax.tree.map(make, params, is_leaf=lambda x: hasattr(x, "shape")),
+    )
+
+
+def adafactor_update(grads: Pytree, state: OptState, params: Pytree,
+                     cfg: TrainConfig, lr: jnp.ndarray) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+    eps = 1e-30
+
+    def upd(p, g, s):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = decay * s["vr"] + (1 - decay) * jnp.mean(g2, axis=-1)
+            vc = decay * s["vc"] + (1 - decay) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(
+                vr[..., None] * vc[..., None, :]
+                / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], eps)
+            )
+            upd_ = g / jnp.maximum(denom, eps)
+            news = {"vr": vr, "vc": vc}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            upd_ = g / (jnp.sqrt(v) + 1e-8)
+            news = {"v": v}
+        # update clipping (RMS <= 1) as in the Adafactor paper
+        rms = jnp.sqrt(jnp.mean(upd_ * upd_) + eps)
+        upd_ = upd_ / jnp.maximum(1.0, rms)
+        new_p = (p.astype(jnp.float32)
+                 - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), news
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state.inner)
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_s = treedef.unflatten([o[1] for o in outs])
+    return new_p, OptState(step, new_s)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params: Pytree) -> OptState:
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        inner=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    )
+
+
+def sgd_update(grads: Pytree, state: OptState, params: Pytree,
+               cfg: TrainConfig, lr: jnp.ndarray) -> Tuple[Pytree, OptState]:
+    step = state.step + 1
+
+    def upd(p, g, m):
+        m = cfg.beta1 * m + g.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    out = jax.tree.map(upd, params, grads, state.inner)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = treedef.unflatten([l[0] for l in leaves])
+    new_m = treedef.unflatten([l[1] for l in leaves])
+    return new_p, OptState(step, new_m)
+
+
+_OPTIMIZERS: Dict[str, Tuple[Callable, Callable]] = {
+    "adamw": (adamw_init, adamw_update),
+    "adafactor": (adafactor_init, adafactor_update),
+    "sgd": (sgd_init, sgd_update),
+}
+
+
+def make_optimizer(name: str) -> Tuple[Callable, Callable]:
+    if name not in _OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}: {sorted(_OPTIMIZERS)}")
+    return _OPTIMIZERS[name]

@@ -1,0 +1,623 @@
+"""Trip-count-aware static cost analysis of post-optimization HLO text.
+
+XLA's ``HloCostAnalysis`` (what ``compiled.cost_analysis()`` reports) visits
+every ``while`` body ONCE — for scan-over-layers models that undercounts
+FLOPs/bytes by ~n_layers x.  This analyzer walks the HLO text with a symbol
+table per computation and multiplies each ``while`` body's cost by its trip
+count (recovered from the loop condition's comparison constant — exact for
+jax-emitted scans, which count 0..L-1 step 1), recursing through nested
+scans (layers x flash-attention KV blocks x SSD head groups).
+
+Counted:
+  flops        — dot (2·|out|·|contraction|), convolution (approx),
+                 arithmetic elementwise (1/elem), reduce, transcendentals
+  bytes        — per instruction: operand + output bytes, with fusions
+                 counted at their boundary only (internal reuse is free,
+                 matching the fusion memory model)
+  collectives  — per family: output bytes of all-reduce / all-gather /
+                 reduce-scatter / all-to-all / collective-permute, x trips
+
+All values are PER DEVICE: the input is the SPMD-partitioned module.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_ELEMENTWISE_1FLOP = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "compare", "select", "and", "or", "xor", "not", "clamp",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "floor", "ceil", "round-nearest-afz", "sign",
+}
+_TRANSCENDENTAL = {"exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+                   "logistic", "sine", "cosine", "atan2", "expm1", "log1p",
+                   "cbrt", "erf"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_FREE_OPS = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+             "after-all", "partition-id", "replica-id", "iota", "copy-start",
+             "copy-done"}
+
+_SHAPE_TOKEN = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\{\s*$")
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    out_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    raw: str            # attribute tail after the operand parens
+    args: str = ""      # literal text inside the operand parens
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, Instr] = field(default_factory=dict)
+    root: Optional[Instr] = None
+
+
+# regions of interest: substring of the HLO op_name metadata -> tag.
+# Used to attribute bytes/flops to model sub-systems (attention, SSD, MoE,
+# CE) so kernel-substitution analyses can re-price a region's traffic.
+REGION_TAGS = {
+    "attend_flash": "attention",
+    "attend_dense": "attention",
+    "attend_local_gather": "attention",
+    "attend_decode": "attention",
+    "ssd_chunked": "ssd",
+    "_ssm_run": "ssd",
+    "moe_block": "moe",
+    "chunked_ce": "ce",
+    "_lm_logits": "ce",
+}
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes: float = 0.0
+    collectives: Dict[str, float] = field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    regions: Dict[str, List[float]] = field(default_factory=dict)
+
+    def add_region(self, tag: str, flops: float, nbytes: float):
+        cur = self.regions.setdefault(tag, [0.0, 0.0])
+        cur[0] += flops
+        cur[1] += nbytes
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.transcendentals += other.transcendentals
+        self.bytes += other.bytes
+        for k in self.collectives:
+            self.collectives[k] += other.collectives[k]
+        for tag, (f, b) in other.regions.items():
+            self.add_region(tag, f, b)
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.transcendentals * k, self.bytes * k,
+                    {c: v * k for c, v in self.collectives.items()},
+                    {t: [f * k, b * k] for t, (f, b) in self.regions.items()})
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE_TOKEN.findall(type_str):
+        if dt in _DTYPE_BYTES:
+            out.append((dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _nbytes(shapes: List[Tuple[str, Tuple[int, ...]]]) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _nelems(shapes) -> float:
+    total = 0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        if cur is None:
+            m = _COMP_START.match(stripped)
+            if m and stripped.endswith("{"):
+                cur = Computation(m.group(1))
+            continue
+        if stripped.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, rest = m.groups()
+        # operand names: %tokens inside the top-level parens
+        depth, args_end = 0, len(rest)
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                if depth == 0:
+                    args_end = i
+                    break
+                depth -= 1
+        arg_str = rest[:args_end]
+        operands = re.findall(r"%([\w.\-]+)", arg_str)
+        instr = Instr(name, op, _shape_list(type_str), operands,
+                      rest[args_end + 1:], arg_str)
+        cur.instrs.append(instr)
+        cur.table[name] = instr
+        if line.lstrip().startswith("ROOT"):
+            cur.root = instr
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans: condition is `iter < constant`; take the compare's
+    constant operand (fall back to the largest integer constant)."""
+    consts: Dict[str, int] = {}
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"(-?\d+)", ins.args or "")
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond.instrs:
+        if ins.op == "compare":
+            for opnd in ins.operands:
+                if opnd in consts:
+                    return max(1, consts[opnd])
+    return max([1] + list(consts.values()))
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps = parse_hlo(text)
+        self._memo: Dict[str, Cost] = {}
+        entry = None
+        for name, comp in self.comps.items():
+            if re.match(r"^main", name):
+                entry = name
+        # ENTRY computation is whichever one the others never call
+        if entry is None:
+            called = set()
+            for comp in self.comps.values():
+                for ins in comp.instrs:
+                    for ref in re.findall(r"(?:calls|body|condition|"
+                                          r"to_apply|branch_computations)="
+                                          r"[{]?%?([\w.\-,%\s]+)", ins.raw):
+                        for r in re.findall(r"[\w.\-]+", ref):
+                            called.add(r)
+            for name in self.comps:
+                if name not in called:
+                    entry = name
+        self.entry = entry
+
+    # ------------------------------------------------------------------
+    def _called(self, ins: Instr, key: str) -> List[str]:
+        # braced list: key={%a, %b} ; single ref: key=%a
+        m = re.search(key + r"=\{([^}]*)\}", ins.raw)
+        if m:
+            return [n.strip().lstrip("%") for n in m.group(1).split(",")
+                    if n.strip()]
+        m = re.search(key + r"=%?([\w.\-]+)", ins.raw)
+        return [m.group(1)] if m else []
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        total = Cost()
+        if comp is None:
+            return total
+        self._memo[comp_name] = total  # guards recursion
+        for ins in comp.instrs:
+            total += self._instr_cost(comp, ins)
+        return total
+
+    _PURE_MOVE = ("parameter", "convert", "bitcast", "copy", "transpose")
+
+    def _is_pure_convert_fusion(self, ins: Instr) -> bool:
+        """Pure dtype/layout-move fusions (convert/copy/transpose chains on a
+        single input) are charged at their consumer: on TPU converts fuse
+        into consumers and entry-parameter layouts are assigned to suit
+        them, so this traffic does not exist separately."""
+        if ins.op != "fusion":
+            return False
+        for callee in self._called(ins, "calls"):
+            comp = self.comps.get(callee)
+            if comp is None:
+                return False
+            for sub in comp.instrs:
+                if sub.op not in self._PURE_MOVE:
+                    return False
+        return True
+
+    def _slice_convert_source(self, comp: Computation, ins: Instr):
+        """If ``ins`` is a fusion that only slices + converts one input
+        (e.g. per-layer dequantization of a packed int8 weight stack),
+        return the effective read: (source_dtype, fusion output dims).
+        On TPU the convert fuses into the consuming dot, so the HBM read
+        is the SLICED region at the STORAGE dtype."""
+        if ins.op != "fusion" or len(ins.operands) != 1:
+            return None
+        has_slice = False
+        for callee in self._called(ins, "calls"):
+            cc = self.comps.get(callee)
+            if cc is None:
+                return None
+            for sub in cc.instrs:
+                if sub.op in ("slice", "dynamic-slice"):
+                    has_slice = True
+                elif sub.op not in self._PURE_MOVE:
+                    return None
+        if not has_slice:
+            return None
+        src = comp.table.get(ins.operands[0])
+        if src is None or not src.out_shapes or not ins.out_shapes:
+            return None
+        return [(src.out_shapes[0][0], ins.out_shapes[0][1])]
+
+    def _resolve_convert(self, comp: Computation, name: str, depth: int = 4):
+        """Walk back through dtype converts/bitcasts/copies (standalone or
+        as pure-convert fusions) to the storage tensor: on TPU a convert
+        fuses into its consumer, so the consumer's HBM read is the ORIGINAL
+        dtype, not the widened one."""
+        src = comp.table.get(name)
+        while src is not None and depth > 0 and len(src.operands) >= 1:
+            if src.op in ("convert", "bitcast", "copy") and \
+                    len(src.operands) == 1:
+                nxt = comp.table.get(src.operands[0])
+            elif self._is_pure_convert_fusion(src) and len(src.operands) == 1:
+                nxt = comp.table.get(src.operands[0])
+            else:
+                break
+            if nxt is None:
+                break
+            src = nxt
+            depth -= 1
+        return src
+
+    def _operand_shapes(self, comp: Computation, ins: Instr):
+        shapes = []
+        for o in ins.operands:
+            src = self._resolve_convert(comp, o)
+            if src is None:
+                continue
+            synth = self._slice_convert_source(comp, src)
+            if synth is not None:
+                shapes.extend(synth)
+            else:
+                shapes.extend(src.out_shapes)
+        return shapes
+
+    @staticmethod
+    def _region_of(ins: Instr) -> Optional[str]:
+        m = re.search(r'op_name="([^"]*)"', ins.raw)
+        if not m:
+            return None
+        for pat, tag in REGION_TAGS.items():
+            if pat in m.group(1):
+                return tag
+        return None
+
+    def _instr_cost(self, comp: Computation, ins: Instr) -> Cost:
+        c = self._instr_cost_inner(comp, ins)
+        # attribute to a region.  Container ops (while/fusion/call) carry
+        # the named_scope in their own metadata even when XLA clones the
+        # inner instructions away from theirs, so containers "top up"
+        # whatever their inner instructions did not already attribute.
+        tag = self._region_of(ins)
+        if tag is not None:
+            if ins.op in ("while", "call", "conditional", "fusion"):
+                prev_f, prev_b = c.regions.get(tag, [0.0, 0.0])
+                c.add_region(tag, max(0.0, c.flops - prev_f),
+                             max(0.0, c.bytes - prev_b))
+            else:
+                c.add_region(tag, c.flops, c.bytes)
+        return c
+
+    def _fusion_operand_bytes(self, comp: Computation, ins: Instr) -> List[float]:
+        """Bytes each fusion operand actually contributes: if the fused
+        computation only ever slices a parameter, the accessed region is the
+        slice (a fusion reading layer i of a stacked weight does not read
+        the whole stack)."""
+        callee = None
+        for cname in self._called(ins, "calls"):
+            callee = self.comps.get(cname)
+        out = []
+        for idx, o in enumerate(ins.operands):
+            src = self._resolve_convert(comp, o)
+            if src is None:
+                continue
+            full = _nbytes(src.out_shapes)
+            if callee is not None:
+                # find parameter(idx) in the fused computation
+                pname = None
+                for sub in callee.instrs:
+                    if sub.op == "parameter" and sub.args.strip() == str(idx):
+                        pname = sub.name
+                        break
+                if pname is not None:
+                    acc = self._accessed_elems(callee, pname)
+                    if acc is not None and src.out_shapes:
+                        dt_bytes = _DTYPE_BYTES.get(src.out_shapes[0][0], 4)
+                        full = min(full, acc * dt_bytes)
+            out.append(full)
+        return out
+
+    @staticmethod
+    def _accessed_elems(callee: Computation, pname: str):
+        """Elements of parameter ``pname`` the fused computation actually
+        touches, walking through convert/bitcast/copy chains to slices.
+        None = whole parameter (or unknown)."""
+        frontier = [pname]
+        elems = 0.0
+        seen = set(frontier)
+        sliced = False
+        while frontier:
+            cur = frontier.pop()
+            for s in callee.instrs:
+                if cur not in s.operands:
+                    continue
+                if s.op in ("convert", "bitcast", "copy") and s.name not in seen:
+                    frontier.append(s.name)
+                    seen.add(s.name)
+                elif s.op in ("slice", "dynamic-slice"):
+                    elems += _nelems(s.out_shapes)
+                    sliced = True
+                else:
+                    return None
+        return elems if sliced else None
+
+    def _slice_cost(self, comp: Computation, ins: Instr) -> Cost:
+        """Slicing/scatter: XLA aliases buffers (in-place in while loops) —
+        traffic is the touched region, not the whole operand buffer."""
+        c = Cost()
+        op = ins.op
+        if op in ("dynamic-slice", "slice"):
+            c.bytes += 2.0 * _nbytes(ins.out_shapes)
+        elif op == "dynamic-update-slice":
+            upd = (comp.table.get(ins.operands[1])
+                   if len(ins.operands) > 1 else None)
+            touched = _nbytes(upd.out_shapes) if upd else _nbytes(ins.out_shapes)
+            c.bytes += 2.0 * touched
+        elif op == "gather":
+            c.bytes += 2.0 * _nbytes(ins.out_shapes)
+            if len(ins.operands) > 1:
+                idx = comp.table.get(ins.operands[1])
+                if idx:
+                    c.bytes += _nbytes(idx.out_shapes)
+        elif op == "scatter":
+            upd = (comp.table.get(ins.operands[2])
+                   if len(ins.operands) > 2 else None)
+            if upd:
+                c.bytes += 2.0 * _nbytes(upd.out_shapes)
+                c.flops += _nelems(upd.out_shapes)  # combining fn
+        return c
+
+    def _instr_cost_inner(self, comp: Computation, ins: Instr) -> Cost:
+        c = Cost()
+        op = ins.op
+        if op in _FREE_OPS:
+            return c
+
+        if op == "while":
+            bodies = self._called(ins, "body")
+            conds = self._called(ins, "condition")
+            # XLA annotates jax scans with the exact trip count
+            m = re.search(r'known_trip_count.*?"n"\s*:\s*"(\d+)"', ins.raw)
+            if m:
+                trips = int(m.group(1))
+            elif conds and conds[0] in self.comps:
+                trips = _trip_count(self.comps[conds[0]])
+            else:
+                trips = 1
+            if bodies and bodies[0] in self.comps:
+                c += self.cost_of(bodies[0]).scaled(trips)
+            if conds and conds[0] in self.comps:
+                c += self.cost_of(conds[0]).scaled(trips)
+            return c
+
+        if op == "fusion":
+            if self._is_pure_convert_fusion(ins) and len(ins.operands) == 1:
+                return c  # conversion traffic; charged at the consumer
+            if self._slice_convert_source(comp, ins) is not None:
+                return c  # slice+convert (dequant) fuses into the consumer
+            aliased_root = False
+            for callee in self._called(ins, "calls"):
+                inner = self.cost_of(callee)
+                # fusion boundary: memory = operands + outputs only
+                c.flops += inner.flops
+                c.transcendentals += inner.transcendentals
+                for k in c.collectives:
+                    c.collectives[k] += inner.collectives[k]
+                for tag, (f, _) in inner.regions.items():
+                    c.add_region(tag, f, 0.0)  # inner bytes are fused away
+                callee_comp = self.comps.get(callee)
+                if callee_comp is not None:
+                    out_elems = _nelems(ins.out_shapes)
+                    for sub in callee_comp.instrs:
+                        # in-place update of a buffer the size of the fusion
+                        # output (possibly re-converted at the root)
+                        if sub.op in ("dynamic-update-slice", "scatter") and \
+                                _nelems(sub.out_shapes) == out_elems:
+                            aliased_root = True
+                            break
+            opnd_bytes = self._fusion_operand_bytes(comp, ins)
+            if aliased_root and opnd_bytes:
+                # in-place update fusion: the big buffer operand is aliased
+                # with the output — traffic is only the non-aliased operands
+                # (the update + indices), twice (read + write of the slice).
+                big = max(opnd_bytes)
+                c.bytes += 2.0 * (sum(opnd_bytes) - big)
+            else:
+                c.bytes += _nbytes(ins.out_shapes) + sum(opnd_bytes)
+            return c
+
+        if op in ("dynamic-slice", "slice", "dynamic-update-slice", "gather",
+                  "scatter"):
+            return self._slice_cost(comp, ins)
+
+        if op in ("call", "conditional", "map", "reduce", "reduce-window",
+                  "sort", "select-and-scatter"):
+            for key in ("to_apply", "calls", "branch_computations"):
+                for callee in self._called(ins, key):
+                    if callee in self.comps:
+                        sub = self.cost_of(callee)
+                        n = _nelems(self._operand_shapes(comp, ins)) if op in (
+                            "reduce", "reduce-window", "map") else 1
+                        c += sub.scaled(max(1, n))
+            c.bytes += _nbytes(ins.out_shapes) + _nbytes(
+                self._operand_shapes(comp, ins))
+            return c
+
+        # collectives
+        for coll in _COLLECTIVES:
+            if op == coll or op.startswith(coll + "-"):
+                if not op.endswith("-done"):
+                    nb = _nbytes(ins.out_shapes)
+                    c.collectives[coll] += nb
+                    c.bytes += nb + _nbytes(self._operand_shapes(comp, ins))
+                return c
+
+        if op == "convert":
+            # dtype conversion fuses into its consumer on TPU: the only HBM
+            # traffic is one read of the source tensor (already charged at
+            # the consumer via _resolve_convert), so a standalone convert
+            # contributes nothing extra.
+            return c
+
+        out_bytes = _nbytes(ins.out_shapes)
+        in_bytes = _nbytes(self._operand_shapes(comp, ins))
+        c.bytes += out_bytes + in_bytes
+
+        if op == "dot":
+            lhs = comp.table.get(ins.operands[0]) if ins.operands else None
+            contract = 1
+            m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.raw)
+            if lhs is not None and m and lhs.out_shapes:
+                dims = lhs.out_shapes[0][1]
+                for idx in m.group(1).split(","):
+                    if idx:
+                        contract *= dims[int(idx)]
+            out_elems = _nelems(ins.out_shapes)
+            c.flops += 2.0 * out_elems * contract
+        elif op == "convolution":
+            out_elems = _nelems(ins.out_shapes)
+            lhs = comp.table.get(ins.operands[1]) if len(ins.operands) > 1 else None
+            kernel = 1
+            if lhs is not None and lhs.out_shapes:
+                for d in lhs.out_shapes[0][1][:-1]:
+                    kernel *= d
+            c.flops += 2.0 * out_elems * kernel
+        elif op in _ELEMENTWISE_1FLOP:
+            c.flops += _nelems(ins.out_shapes)
+        elif op in _TRANSCENDENTAL:
+            n = _nelems(ins.out_shapes)
+            c.transcendentals += n
+            c.flops += n
+        return c
+
+    # ------------------------------------------------------------------
+    def total(self) -> Cost:
+        if self.entry is None:
+            return Cost()
+        return self.cost_of(self.entry)
+
+
+def top_contributors(text: str, n: int = 20):
+    """Debug/profile view: the n instructions with the largest TOTAL bytes
+    (cost x trip multiplier).  This is the dry-run's answer to a profiler
+    trace — §Perf iterations read this to find what to attack."""
+    hc = HloCost(text)
+    total = hc.total()  # populate memo
+    del total
+    # compute per-computation multiplicity by walking from the entry
+    mult: Dict[str, float] = {hc.entry: 1.0}
+    order = [hc.entry]
+    seen = {hc.entry}
+    while order:
+        name = order.pop(0)
+        comp = hc.comps.get(name)
+        if comp is None:
+            continue
+        for ins in comp.instrs:
+            trips = 1.0
+            if ins.op == "while":
+                m = re.search(r'known_trip_count.*?"n"\s*:\s*"(\d+)"', ins.raw)
+                trips = float(m.group(1)) if m else 1.0
+            for key in ("calls", "body", "condition", "to_apply",
+                        "branch_computations"):
+                for callee in hc._called(ins, key):
+                    if callee in hc.comps:
+                        mult[callee] = mult.get(callee, 0.0) + \
+                            mult.get(name, 1.0) * trips
+                        if callee not in seen:
+                            seen.add(callee)
+                            order.append(callee)
+    rows = []
+    for cname, comp in hc.comps.items():
+        k = mult.get(cname, 0.0)
+        if k <= 0:
+            continue
+        for ins in comp.instrs:
+            c = hc._instr_cost(comp, ins)
+            if ins.op in ("while",):
+                continue  # children accounted separately
+            if c.bytes <= 0 and c.flops <= 0:
+                continue
+            meta = re.search(r'op_name="([^"]*)"', ins.raw)
+            rows.append((c.bytes * k, c.flops * k, ins.op,
+                         f"{cname}/{ins.name}",
+                         meta.group(1)[-80:] if meta else ""))
+    rows.sort(reverse=True)
+    return rows[:n]
+
+
+def analyze_hlo_text(text: str) -> Dict[str, float]:
+    cost = HloCost(text).total()
+    out = {
+        "flops": cost.flops,
+        "transcendentals": cost.transcendentals,
+        "bytes": cost.bytes,
+        "collectives": dict(cost.collectives),
+        "regions": {t: {"flops": f, "bytes": b}
+                    for t, (f, b) in cost.regions.items()},
+    }
+    out["collectives"]["total"] = sum(cost.collectives.values())
+    return out

@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine, Request
+from repro.serve.sampler import sample
+
+__all__ = ["ServeEngine", "Request", "sample"]

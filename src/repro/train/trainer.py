@@ -1,0 +1,178 @@
+"""Training loop: jit'd train_step factory + a Trainer that wires the data
+pipeline, checkpoint manager, failure injection/restart, and straggler
+monitoring together.
+
+``make_train_step`` builds the pure step function the dry-run lowers on the
+production mesh: microbatched gradient accumulation (scan), global-norm
+clipping, cosine-warmup LR, the chosen optimizer, and (optionally) int8
+error-feedback gradient compression on the cross-pod reduction.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig, TrainConfig
+from repro.models import forward
+from repro.models.transformer import chunked_ce
+from repro.optim import (
+    cosine_warmup,
+    error_feedback_compress,
+    make_optimizer,
+)
+
+Pytree = Any
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = _global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    tcfg: TrainConfig,
+    donate: bool = True,
+) -> Callable:
+    """Returns jit'd ``step(params, opt_state, ef_state, batch) ->
+    (params, opt_state, ef_state, metrics)``.
+
+    ``ef_state`` is the error-feedback buffer when gradient compression is
+    on (pass None/empty dict otherwise).
+    """
+    init_fn, update_fn = make_optimizer(tcfg.optimizer)
+    del init_fn
+
+    def loss_of(params, batch):
+        hidden, aux = forward(params, batch, cfg, remat=tcfg.remat,
+                              return_hidden=True)
+        return chunked_ce(params, hidden, batch["labels"], cfg, aux=aux)
+
+    def step(params, opt_state, ef_state, batch):
+        mb = tcfg.microbatches
+        if mb > 1:
+            def one_micro(carry, micro):
+                acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, micro)
+                acc = (acc[0] + l, jax.tree.map(jnp.add, acc[1], g))
+                return acc, None
+
+            micros = jax.tree.map(
+                lambda x: x.reshape((mb, x.shape[0] // mb) + x.shape[1:]),
+                batch)
+            zero = (jnp.zeros(()),
+                    jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 params))
+            (loss, grads), _ = jax.lax.scan(one_micro, zero, micros)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+
+        if tcfg.grad_compress_bits:
+            grads, ef_state = error_feedback_compress(
+                grads, ef_state, tcfg.grad_compress_bits)
+
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        lr = cosine_warmup(opt_state.step, tcfg.lr, tcfg.warmup_steps,
+                           tcfg.total_steps)
+        params, opt_state = update_fn(grads, opt_state, params, tcfg, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, ef_state, metrics
+
+    if donate:
+        return jax.jit(step, donate_argnums=(0, 1, 2))
+    return jax.jit(step)
+
+
+class Trainer:
+    """Step-loop driver with checkpoint/restart and straggler hooks."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainConfig,
+        params,
+        pipeline,
+        ckpt_manager=None,
+        ckpt_every: int = 50,
+        straggler_monitor=None,
+        failure_injector=None,
+    ):
+        from repro.optim import ef_state_init
+
+        self.cfg, self.tcfg = cfg, tcfg
+        self.params = params
+        init_fn, _ = make_optimizer(tcfg.optimizer)
+        self.opt_state = init_fn(params)
+        self.ef_state = (
+            ef_state_init(params) if tcfg.grad_compress_bits else
+            jax.tree.map(lambda p: jnp.zeros((0,)), {}))
+        self.pipeline = pipeline
+        self.ckpt = ckpt_manager
+        self.ckpt_every = ckpt_every
+        self.straggler = straggler_monitor
+        self.injector = failure_injector
+        self.step_fn = make_train_step(cfg, tcfg, donate=False)
+        self.history: list = []
+        self.restarts = 0
+
+    # -------------------------------------------------------------- resume
+    def maybe_resume(self) -> int:
+        if self.ckpt is None:
+            return 0
+        tmpl = {"params": self.params, "opt": self.opt_state,
+                "ef": self.ef_state}
+        step, tree, extra = self.ckpt.restore_latest(tmpl)
+        if step is None:
+            return 0
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.ef_state = tree["ef"]
+        self.pipeline.state.step = int(extra.get("data_step", step))
+        return step
+
+    # ----------------------------------------------------------------- run
+    def run(self, total_steps: int) -> Dict[str, list]:
+        from repro.ft.failures import run_with_restarts
+
+        start = self.maybe_resume()
+
+        def do_step(step: int):
+            t0 = time.perf_counter()
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.pipeline.batch_at(step).items()}
+            self.params, self.opt_state, self.ef_state, metrics = self.step_fn(
+                self.params, self.opt_state, self.ef_state, batch)
+            loss = float(metrics["loss"])
+            self.history.append(loss)
+            dt = time.perf_counter() - t0
+            if self.straggler is not None:
+                self.straggler.observe(step, {0: dt})
+            if self.ckpt is not None and (step + 1) % self.ckpt_every == 0:
+                self.ckpt.save(step + 1,
+                               {"params": self.params, "opt": self.opt_state,
+                                "ef": self.ef_state},
+                               extra={"data_step": step + 1})
+
+        def restore() -> int:
+            step = self.maybe_resume()
+            self.restarts += 1
+            return step
+
+        run_with_restarts(
+            do_step, start_step=start, total_steps=total_steps,
+            restore_fn=restore, injector=self.injector)
+        if self.ckpt is not None:
+            self.ckpt.wait()
+        return {"loss": self.history}

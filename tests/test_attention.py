@@ -1,0 +1,96 @@
+"""Attention path equivalences: dense == flash == local-gather == decode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    attend_decode,
+    attend_dense,
+    attend_flash,
+    attend_local_gather,
+)
+
+
+def _qkv(b=2, s=128, hq=8, hkv=4, d=32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("bq,bkv", [(32, 32), (64, 128), (128, 64)])
+def test_flash_equals_dense(window, bq, bkv):
+    q, k, v, pos = _qkv()
+    od = attend_dense(q, k, v, pos, pos, window)
+    of = attend_flash(q, k, v, pos, window, block_q=bq, block_kv=bkv)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(of),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_traced_window():
+    """Per-layer window flags are traced scalars under scan."""
+    q, k, v, pos = _qkv()
+    f = jax.jit(lambda w: attend_flash(q, k, v, pos, w, block_q=64,
+                                       block_kv=64))
+    od0 = attend_dense(q, k, v, pos, pos, 0)
+    od32 = attend_dense(q, k, v, pos, pos, 32)
+    np.testing.assert_allclose(np.asarray(f(jnp.int32(0))), np.asarray(od0),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(f(jnp.int32(32))), np.asarray(od32),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_local_gather_equals_dense(window):
+    q, k, v, pos = _qkv(s=256)
+    od = attend_dense(q, k, v, pos, pos, window)
+    og = attend_local_gather(q, k, v, pos, window)
+    np.testing.assert_allclose(np.asarray(od), np.asarray(og),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_matches_dense_last_position():
+    """Decode with a cache == dense attention's last-row output."""
+    q, k, v, pos = _qkv(s=64)
+    out_full = attend_dense(q, k, v, pos, pos, 0)
+    got = attend_decode(q[:, -1:], k, v, jnp.full((2,), 63), 0)
+    np.testing.assert_allclose(np.asarray(out_full[:, -1:]), np.asarray(got),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_decode_window_masks_old_tokens():
+    q, k, v, pos = _qkv(s=64)
+    full = attend_decode(q[:, -1:], k, v, jnp.full((2,), 63), 0)
+    windowed = attend_decode(q[:, -1:], k, v, jnp.full((2,), 63), 16)
+    assert not np.allclose(np.asarray(full), np.asarray(windowed))
+    # windowed == dense with the same sliding window
+    ref = attend_dense(q, k, v, pos, pos, 16)[:, -1:]
+    np.testing.assert_allclose(np.asarray(windowed), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gqa_grouping():
+    """GQA result == MHA with kv heads explicitly repeated."""
+    q, k, v, pos = _qkv(hq=8, hkv=2)
+    out_gqa = attend_dense(q, k, v, pos, pos, 0)
+    k_rep = jnp.repeat(k, 4, axis=2)
+    v_rep = jnp.repeat(v, 4, axis=2)
+    out_mha = attend_dense(q, k_rep, v_rep, pos, pos, 0)
+    np.testing.assert_allclose(np.asarray(out_gqa), np.asarray(out_mha),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_causality():
+    """Future tokens never influence past outputs."""
+    q, k, v, pos = _qkv(s=32, seed=3)
+    base = attend_dense(q, k, v, pos, pos, 0)
+    k2 = k.at[:, -1].set(999.0)
+    v2 = v.at[:, -1].set(999.0)
+    pert = attend_dense(q, k2, v2, pos, pos, 0)
+    np.testing.assert_allclose(np.asarray(base[:, :-1]),
+                               np.asarray(pert[:, :-1]), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,174 @@
+"""Checkpointing + fault tolerance: roundtrip, integrity, rotation, async,
+restart drills, elastic shrink plans, straggler detection."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager, load_checkpoint, save_checkpoint
+from repro.ckpt.checkpoint import latest_step
+from repro.config.base import MeshConfig
+from repro.ft import (
+    ElasticMeshManager,
+    FailureInjector,
+    RestartPolicy,
+    StragglerMonitor,
+)
+from repro.ft.failures import SimulatedNodeFailure, run_with_restarts
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.zeros((16,), jnp.bfloat16)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+class TestCheckpoint:
+    def test_roundtrip(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            save_checkpoint(d, 5, tree, extra={"data_step": 5})
+            out, extra = load_checkpoint(d, jax.tree.map(jnp.zeros_like, tree))
+            assert extra["data_step"] == 5
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_multi_host_roundtrip(self):
+        tree = _tree(1)
+        with tempfile.TemporaryDirectory() as d:
+            # hosts write their leaf shards; host 0 last to finalize
+            for h in (1, 2, 0):
+                save_checkpoint(d, 3, tree, host_id=h, n_hosts=3)
+            out, _ = load_checkpoint(d, jax.tree.map(jnp.zeros_like, tree))
+            for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_corruption_detected(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            path = save_checkpoint(d, 1, tree)
+            shard = os.path.join(path, "shard_0.bin")
+            blob = bytearray(open(shard, "rb").read())
+            blob[len(blob) // 2] ^= 0xFF
+            open(shard, "wb").write(bytes(blob))
+            with pytest.raises(Exception):
+                load_checkpoint(d, tree)
+
+    def test_uncommitted_invisible(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            path = save_checkpoint(d, 2, tree)
+            os.remove(os.path.join(path, "COMMITTED"))
+            assert latest_step(d) is None
+
+    def test_manager_rotation_and_resume(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False)
+            for s in (10, 20, 30):
+                mgr.save(s, tree)
+            steps = sorted(int(n.split("_")[1])
+                           for n in os.listdir(d) if n.startswith("step_"))
+            assert steps == [20, 30]
+            step, out, _ = mgr.restore_latest(tree)
+            assert step == 30
+
+    def test_async_save(self):
+        tree = _tree()
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=3, async_save=True)
+            mgr.save(1, tree)
+            mgr.wait()
+            assert latest_step(d) == 1
+
+
+class TestFailureRecovery:
+    def test_injector_raises_once(self):
+        inj = FailureInjector(schedule={3: 7})
+        inj.check(2)
+        with pytest.raises(SimulatedNodeFailure):
+            inj.check(3)
+        inj.check(3)  # consumed
+
+    def test_restart_policy_budget(self):
+        pol = RestartPolicy(max_restarts=2, backoff_s=0.0)
+        pol.on_failure(RuntimeError("x"), 1)
+        pol.on_failure(RuntimeError("x"), 2)
+        with pytest.raises(RuntimeError):
+            pol.on_failure(RuntimeError("x"), 3)
+
+    def test_run_with_restarts_recovers(self):
+        executed = []
+        ckpt = {"step": 0}
+
+        def step_fn(s):
+            executed.append(s)
+            if (s + 1) % 4 == 0:
+                ckpt["step"] = s + 1
+
+        inj = FailureInjector(schedule={6: 1, 9: 2})
+        restarts = run_with_restarts(
+            step_fn, start_step=0, total_steps=12,
+            restore_fn=lambda: ckpt["step"],
+            policy=RestartPolicy(backoff_s=0.0),
+            injector=inj)
+        assert restarts == 2
+        assert max(executed) == 11
+        # every step eventually executed
+        assert set(range(12)) <= set(executed)
+
+
+class TestElastic:
+    def test_shrink_pod_loss(self):
+        mgr = ElasticMeshManager(MeshConfig(multi_pod=True))
+        plan = mgr.plan_shrink(lost_nodes=64, chips_per_node=4)  # lose a pod
+        assert plan.new_shape[-1] == 16          # model axis intact
+        total_old = 512
+        total_new = 1
+        for s in plan.new_shape:
+            total_new *= s
+        assert total_new == 256
+        assert plan.grad_accum_factor == 2       # keep global batch
+
+    def test_shrink_partial(self):
+        mgr = ElasticMeshManager(MeshConfig(multi_pod=False))
+        plan = mgr.plan_shrink(lost_nodes=8, chips_per_node=4)  # 256->224
+        total = 1
+        for s in plan.new_shape:
+            total *= s
+        assert total <= 224 and plan.new_shape[-1] == 16
+
+    def test_shrink_too_much(self):
+        mgr = ElasticMeshManager(MeshConfig(multi_pod=False))
+        with pytest.raises(ValueError):
+            mgr.plan_shrink(lost_nodes=64, chips_per_node=4)
+
+
+class TestStraggler:
+    def test_detects_persistent_straggler(self):
+        mon = StragglerMonitor(threshold=1.5, patience=3, mitigation="skip")
+        events = []
+        for step in range(6):
+            times = {h: 1.0 for h in range(8)}
+            times[3] = 3.0  # host 3 is chronically slow
+            events += mon.observe(step, times)
+        assert events and all(e.host == 3 for e in events)
+        assert events[0].action == "skip"
+        assert 3 in mon.chronic_hosts()
+
+    def test_tolerates_transient_blip(self):
+        mon = StragglerMonitor(threshold=1.5, patience=3)
+        events = []
+        for step in range(8):
+            times = {h: 1.0 for h in range(4)}
+            if step == 2:
+                times[1] = 5.0  # one-off blip
+            events += mon.observe(step, times)
+        assert not events

@@ -1,0 +1,78 @@
+"""Decode-path variants: unstacked caches, int8 KV cache, engine bits —
+all must agree with the reference stacked/bf16/dense path."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import EngineConfig
+from repro.models import decode_step, init_cache, init_params, quantize_params
+
+from conftest import reduced_f32
+
+
+def _roll(cfg, params, caches, engs, steps=10, seed=1):
+    toks = jax.random.randint(
+        jax.random.PRNGKey(seed),
+        (2, steps, cfg.n_codebooks) if cfg.family == "audio" else (2, steps),
+        0, cfg.vocab_size)
+    outs = [[] for _ in caches]
+    for i in range(steps):
+        t = toks[:, i:i + 1]
+        for j, (p, c, e) in enumerate(zip(params, caches, engs)):
+            lg, caches[j] = decode_step(p, caches[j], t, cfg, e)
+            outs[j].append(np.asarray(lg))
+    return [np.concatenate(o, axis=1) for o in outs]
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "zamba2-7b",
+                                  "qwen3-moe-235b-a22b"])
+def test_unstacked_equals_stacked(arch, rng):
+    cfg = reduced_f32(arch, capacity_factor=8.0)
+    p = init_params(cfg, rng)
+    c1 = init_cache(cfg, 2, max_len=10, stacked=True)
+    c2 = init_cache(cfg, 2, max_len=10, stacked=False)
+    o1, o2 = _roll(cfg, [p, p], [c1, c2], [None, None])
+    np.testing.assert_allclose(o1, o2, rtol=1e-4, atol=1e-4)
+
+
+def test_int8_kv_cache_close(rng):
+    cfg = reduced_f32("qwen2.5-3b")
+    p = init_params(cfg, rng)
+    c1 = init_cache(cfg, 2, max_len=10, stacked=False)
+    c2 = init_cache(cfg, 2, max_len=10, stacked=False, kv_bits=8)
+    assert c2["k"][0].dtype == jnp.int8
+    assert "k_scale" in c2
+    o1, o2 = _roll(cfg, [p, p], [c1, c2], [None, None])
+    rel = np.max(np.abs(o1 - o2)) / np.max(np.abs(o1))
+    assert rel < 0.05, rel
+    agree = np.mean(np.argmax(o1, -1) == np.argmax(o2, -1))
+    assert agree > 0.85, agree
+
+
+def test_engine_bits_with_unstacked_cache(rng):
+    cfg = reduced_f32("qwen2.5-3b")
+    p = init_params(cfg, rng)
+    q8 = quantize_params(p, cfg, 8)
+    eng = EngineConfig(weight_bits=8, use_pallas=False)
+    c1 = init_cache(cfg, 2, max_len=10, stacked=False)
+    c2 = init_cache(cfg, 2, max_len=10, stacked=False)
+    o1, o2 = _roll(cfg, [p, q8], [c1, c2], [None, eng])
+    agree = np.mean(np.argmax(o1, -1) == np.argmax(o2, -1))
+    assert agree > 0.85, agree
+
+
+def test_full_imagine_mode(rng):
+    """weights int8 bit-plane + int8 KV cache together (hillclimb-A final)."""
+    cfg = reduced_f32("gemma3-27b")
+    p = init_params(cfg, rng)
+    q8 = quantize_params(p, cfg, 8)
+    eng = EngineConfig(weight_bits=8, kv_bits=8, use_pallas=False)
+    c1 = init_cache(cfg, 2, max_len=10, stacked=False)
+    c2 = init_cache(cfg, 2, max_len=10, stacked=False, kv_bits=8)
+    o1, o2 = _roll(cfg, [p, q8], [c1, c2], [None, eng])
+    agree = np.mean(np.argmax(o1, -1) == np.argmax(o2, -1))
+    assert agree > 0.8, agree

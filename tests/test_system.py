@@ -1,0 +1,185 @@
+"""End-to-end behaviour tests: training converges, checkpoint/restart drill
+reproduces the uninterrupted run, the serving engine generates coherently
+with and without the IMAGine engine, quantization degrades gracefully."""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.config.base import EngineConfig, ServeConfig, TrainConfig
+from repro.data import DataPipeline
+from repro.ft import FailureInjector, StragglerMonitor
+from repro.models import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    quantize_params,
+)
+from repro.serve import ServeEngine
+from repro.train import Trainer
+
+from conftest import reduced_f32
+
+
+def _mk(arch="qwen2.5-3b", seed=0, **kw):
+    cfg = reduced_f32(arch, **kw)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+class TestTraining:
+    def test_loss_decreases(self):
+        cfg, params = _mk()
+        tcfg = TrainConfig(lr=1e-3, total_steps=30, warmup_steps=5)
+        pipe = DataPipeline(cfg, batch=4, seq_len=32, seed=1)
+        tr = Trainer(cfg, tcfg, params, pipe)
+        hist = tr.run(15)["loss"]
+        assert hist[-1] < hist[0]
+        assert all(np.isfinite(hist))
+
+    def test_microbatched_equals_full_batch(self):
+        """Gradient accumulation must not change the loss value."""
+        from repro.optim import make_optimizer
+        from repro.train.trainer import make_train_step
+
+        cfg, params = _mk(seed=3)
+        pipe = DataPipeline(cfg, batch=4, seq_len=16, seed=2)
+        batch = {k: jnp.asarray(v) for k, v in pipe.batch_at(0).items()}
+        losses = {}
+        for mb in (1, 2, 4):
+            tcfg = TrainConfig(microbatches=mb)
+            step = make_train_step(cfg, tcfg, donate=False)
+            init_fn, _ = make_optimizer("adamw")
+            _, _, _, m = step(params, init_fn(params), {}, batch)
+            losses[mb] = float(m["loss"])
+        assert abs(losses[1] - losses[2]) < 5e-3
+        assert abs(losses[1] - losses[4]) < 5e-3
+
+    def test_restart_drill_matches_uninterrupted(self):
+        """Failure at step 12 + restore from the step-10 checkpoint must end
+        at the same final loss as a run that never failed (deterministic
+        data + complete checkpoints)."""
+        cfg, params = _mk(seed=5)
+        tcfg = TrainConfig(lr=5e-4, total_steps=40, warmup_steps=2)
+
+        def run(inject):
+            pipe = DataPipeline(cfg, batch=4, seq_len=16, seed=9)
+            with tempfile.TemporaryDirectory() as d:
+                tr = Trainer(
+                    cfg, tcfg, params, pipe,
+                    ckpt_manager=CheckpointManager(d, async_save=False),
+                    ckpt_every=5,
+                    failure_injector=FailureInjector(
+                        schedule={12: 0} if inject else {}),
+                )
+                tr.run(16)
+                return tr
+
+        clean = run(False)
+        failed = run(True)
+        assert failed.restarts == 1
+        assert abs(clean.history[-1] - failed.history[-1]) < 1e-5
+
+    def test_grad_compression_trains(self):
+        cfg, params = _mk(seed=7)
+        tcfg = TrainConfig(lr=1e-3, grad_compress_bits=8, total_steps=20,
+                           warmup_steps=2)
+        pipe = DataPipeline(cfg, batch=2, seq_len=16, seed=3)
+        tr = Trainer(cfg, tcfg, params, pipe,
+                     straggler_monitor=StragglerMonitor())
+        hist = tr.run(10)["loss"]
+        assert hist[-1] < hist[0] + 0.05
+
+
+class TestServing:
+    def test_continuous_batching_completes_all(self):
+        cfg, params = _mk(seed=1)
+        eng = ServeEngine(cfg, params, ServeConfig(max_new_tokens=4),
+                          n_slots=2, max_len=32)
+        eng.submit([1, 2, 3])
+        eng.submit([4])
+        eng.submit([5, 6])
+        done = eng.run()
+        assert len(done) == 3
+        assert all(len(r.output) == 4 for r in done)
+
+    def test_greedy_deterministic(self):
+        cfg, params = _mk(seed=2)
+        outs = []
+        for _ in range(2):
+            eng = ServeEngine(cfg, params, ServeConfig(max_new_tokens=6),
+                              n_slots=1, max_len=32)
+            eng.submit([7, 8, 9])
+            outs.append(eng.run()[0].output)
+        assert outs[0] == outs[1]
+
+    def test_engine_quantized_matches_dense_mostly(self):
+        """int8 IMAGine serving: greedy tokens match the dense path for
+        most steps (quantization noise may flip late tokens)."""
+        cfg, params = _mk(seed=3)
+        prompts = [[1, 2, 3], [9, 8]]
+
+        def gen(engine_cfg):
+            eng = ServeEngine(
+                cfg, params,
+                ServeConfig(max_new_tokens=4, engine=engine_cfg),
+                n_slots=2, max_len=32)
+            for p in prompts:
+                eng.submit(p)
+            return sorted(eng.run(), key=lambda r: r.rid)
+
+        dense = gen(EngineConfig())
+        quant = gen(EngineConfig(weight_bits=8, use_pallas=False))
+        matches = sum(
+            t1 == t2
+            for a, b in zip(dense, quant)
+            for t1, t2 in zip(a.output, b.output))
+        assert matches >= 6  # of 8 tokens
+
+
+class TestQuantizedParams:
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_quantized_forward_close(self, bits):
+        cfg, params = _mk(seed=4)
+        qparams = quantize_params(params, cfg, bits)
+        toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0,
+                                  cfg.vocab_size)
+        eng = EngineConfig(weight_bits=bits, use_pallas=False)
+        lg_d, _ = forward(params, {"tokens": toks}, cfg, remat="none")
+        lg_q, _ = forward(qparams, {"tokens": toks}, cfg, eng, remat="none")
+        agree = float(jnp.mean(
+            (jnp.argmax(lg_d, -1) == jnp.argmax(lg_q, -1))
+            .astype(jnp.float32)))
+        assert agree > (0.9 if bits == 8 else 0.5), agree
+
+    def test_quantized_storage_shrinks(self):
+        cfg, params = _mk(seed=4)
+
+        def nbytes(t):
+            return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(t)
+                       if hasattr(l, "dtype"))
+
+        q8 = quantize_params(params, cfg, 8)
+        q4 = quantize_params(params, cfg, 4)
+        q2 = quantize_params(params, cfg, 2)
+        assert nbytes(q8) < nbytes(params)
+        assert nbytes(q4) < nbytes(q8)
+        assert nbytes(q2) < nbytes(q4)
+
+    def test_quantized_decode_runs_all_archs(self):
+        for arch in ("gemma3-27b", "mamba2-130m", "zamba2-7b",
+                     "qwen3-moe-235b-a22b", "musicgen-medium"):
+            cfg, params = _mk(arch, seed=6, capacity_factor=8.0)
+            qparams = quantize_params(params, cfg, 8)
+            eng = EngineConfig(weight_bits=8, use_pallas=False)
+            cache = init_cache(cfg, 2, max_len=8)
+            shape = ((2, 1, cfg.n_codebooks) if cfg.family == "audio"
+                     else (2, 1))
+            tok = jnp.zeros(shape, jnp.int32)
+            lg, _ = decode_step(qparams, cache, tok, cfg, eng)
+            assert np.all(np.isfinite(np.asarray(lg, dtype=np.float32))), arch
