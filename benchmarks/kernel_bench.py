@@ -8,8 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.gemv_engine import quantize_linear
-from repro.kernels.bitplane_gemv.ops import bitplane_gemv
+from repro.engine import EnginePlan, pack_linear
 from repro.kernels.bitplane_gemv.ref import bitplane_gemv_ref
 from repro.kernels.int8_matvec.ops import int8_matvec
 
@@ -31,12 +30,15 @@ def run():
     x = jnp.asarray(rng.standard_normal((b, kdim)).astype(np.float32))
 
     for bits in (8, 4, 2):
-        ql = quantize_linear(w, bits)
+        ql = pack_linear(w, bits)
         for radix in (1, 2):
             if bits % radix:
                 continue
-            us = _time(bitplane_gemv, ql.packed, ql.scale, x,
-                       bits=bits, radix=radix, interpret=True)
+            # one resolved plan per (bits, radix) sweep point — the same
+            # dispatch object the serving path threads through
+            plan = EnginePlan(backend="pallas_interpret", bits=bits,
+                              radix=radix)
+            us = _time(plan.apply, ql, x)
             passes = bits // radix
             bytes_per_weight = bits / 8
             macs = b * kdim * n
@@ -51,8 +53,8 @@ def run():
         us_ref = _time(bitplane_gemv_ref, ql.packed, ql.scale, x, bits=bits)
         rows.append((f"kernels.bitplane_ref.b{bits}", round(us_ref, 1), ""))
 
-    ql8 = quantize_linear(w, 8)
-    us = _time(int8_matvec, ql8.packed, ql8.scale, x, interpret=True)
+    ql8 = pack_linear(w, 8)
+    us = _time(int8_matvec, ql8.packed, ql8.scale, x)
     rows.append(("kernels.int8_matvec.baseline", round(us, 1),
                  "bit-parallel comparison point"))
     return rows

@@ -17,10 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.controller import run_gemv
-from repro.core.gemv_engine import quantize_linear
 from repro.core.isa import assemble_gemv, roundtrip
 from repro.core.latency_model import FIG6_DESIGNS, IMAGINE_FSYS_MHZ
-from repro.kernels.bitplane_gemv.ops import bitplane_gemv
+from repro.engine import EnginePlan, pack_linear
 
 
 def main():
@@ -49,9 +48,10 @@ def main():
 
     print("== 3. the same GEMV on the TPU engine (bit-plane kernel) ==")
     # integer weights map exactly into the int8 engine format
-    ql = quantize_linear(jnp.asarray(w.T, jnp.float32), bits=8)
-    y_tpu = bitplane_gemv(ql.packed, ql.scale, jnp.asarray(x, jnp.float32),
-                          bits=8, radix=1, interpret=True)
+    ql = pack_linear(jnp.asarray(w.T, jnp.float32), bits=8)
+    plan = EnginePlan(backend="pallas_interpret", bits=8, radix=1)
+    y_tpu = plan.apply(ql, jnp.asarray(x, jnp.float32),
+                       out_dtype=jnp.float32)
     err = float(np.max(np.abs(np.asarray(y_tpu) - (w @ x))))
     rel = err / max(1.0, float(np.max(np.abs(w @ x))))
     print(f"bit-plane kernel matches: rel_err={rel:.2e}")

@@ -48,7 +48,7 @@ def main():
 
     # IMAGine engine: quantize to int8 bit-planes and decode
     qparams = quantize_params(params, cfg, bits=8)
-    eng = EngineConfig(weight_bits=8, use_pallas=False)
+    eng = EngineConfig(weight_bits=8, backend="reference")
     cache = init_cache(cfg, batch=2, max_len=16)
     tok = jnp.asarray([[1], [2]], jnp.int32)
     for i in range(4):

@@ -52,8 +52,8 @@ def main():
     results = {}
     for label, engine in (
         ("dense-bf16", EngineConfig()),
-        ("imagine-int8", EngineConfig(weight_bits=8, use_pallas=False)),
-        ("imagine-int4", EngineConfig(weight_bits=4, use_pallas=False)),
+        ("imagine-int8", EngineConfig(weight_bits=8, backend="reference")),
+        ("imagine-int4", EngineConfig(weight_bits=4, backend="reference")),
     ):
         eng = ServeEngine(
             cfg, params,

@@ -33,10 +33,12 @@ def main():
         model=get_arch(arch), shape=SHAPES[shape_name],
         mesh=MeshConfig(multi_pod=multi),
         serve=ServeConfig(engine=EngineConfig(
-            weight_bits=engine_bits, use_pallas=False)),
+            weight_bits=engine_bits, backend="reference")),
     )
+    from repro.dist import use_mesh
+
     mesh = make_production_mesh(multi_pod=multi)
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         fn, args, kind = build_cell(run, mesh)
         compiled = fn.lower(*args).compile()
     text = compiled.as_text()

@@ -258,13 +258,20 @@ class EngineConfig:
     ``radix``: bits retired per bit-serial pass — 1 reproduces IMAGine's
         radix-2 Booth behaviour (one plane per pass), 2 reproduces
         IMAGine-slice4 (radix-4 Booth), 8 collapses to bit-parallel int8.
+    ``backend``: engine backend registry name ("auto" selects from
+        ``jax.default_backend()``: the compiled Pallas kernel on TPU, the
+        exact jnp reference elsewhere).  Resolved once, by
+        ``repro.engine.resolve_plan``, into an ``EnginePlan``.
+    ``use_pallas``: DEPRECATED legacy knob, honoured only when ``backend``
+        is "auto" (False pins the "reference" backend).
     """
 
     weight_bits: int = 0
     radix: int = 1
     kv_bits: int = 0             # beyond-paper: bit-plane the KV cache too
     act_dtype: str = "bfloat16"
-    use_pallas: bool = True      # TPU target; CPU dry-run uses the jnp path
+    backend: str = "auto"        # engine backend name (see repro.engine)
+    use_pallas: bool = True      # DEPRECATED: pre-EnginePlan dispatch knob
     tile_m: int = 256            # engine tile rows   (PE columns per tile)
     tile_k: int = 512            # engine tile depth  (weights streamed E->W)
 
@@ -275,6 +282,11 @@ class EngineConfig:
             raise ValueError(f"radix must be 1/2/4/8, got {self.radix}")
         if self.kv_bits not in (0, 8):
             raise ValueError(f"kv_bits must be 0/8, got {self.kv_bits}")
+        if not isinstance(self.backend, str) or not self.backend:
+            raise ValueError(f"backend must be a backend name, got "
+                             f"{self.backend!r}")
+        # backend names are validated against the live registry when the
+        # config is resolved into a plan (repro.engine.resolve_plan).
 
     @property
     def enabled(self) -> bool:

@@ -1,18 +1,20 @@
-"""The IMAGine GEMV engine, TPU-native.
+"""DEPRECATED legacy surface of the IMAGine GEMV engine.
 
-``QuantizedLinear`` is the weight-stationary, bit-packed linear layer used on
-the decode (serving) path: weights live as signed b-bit integers packed into
-int8 (b/8 bytes per weight in HBM — the memory-roofline win that mirrors the
-paper's "PEs scale with memory capacity"), with per-output-channel float
-scales.
+The engine's real API now lives in :mod:`repro.engine`:
+``PackedLinear`` (unified weight pytree), the backend registry, and
+``EnginePlan`` (resolved dispatch).  This module keeps the original
+entry points alive as thin shims:
 
-``gemv`` dispatches between:
-  * the Pallas kernel (``repro.kernels.bitplane_gemv``) — the TPU hot path,
-    bit-serial over planes with radix 1/2/4 (radix-2 / radix-4-Booth /
-    nibble-serial), validated in interpret mode on CPU;
-  * a pure-jnp path with identical semantics, used for CPU execution and for
-    the 512-device dry-run lowering (Pallas TPU kernels do not lower on the
-    CPU backend).
+  * ``QuantizedLinear`` / ``quantize_linear`` — the old NamedTuple weight
+    container (convert with ``repro.engine.as_packed``);
+  * ``gemv(..., use_pallas=, interpret=)`` — the old boolean dispatch,
+    now mapped onto a one-off ``EnginePlan``;
+  * ``engine_dense`` — the old model-integration helper.
+
+``gemv_reference`` and ``gemv_bit_serial_reference`` remain the named
+numerical oracles (they are the ``reference`` / ``bit_serial`` backends'
+definitions and are still imported by kernel tests and the ISA
+cross-check).
 
 Both paths compute y = scale * (unpacked_int_W @ x) exactly (integer
 accumulation is exact in fp32 for b<=8 and K<=2^15 per tile).
@@ -70,21 +72,19 @@ def gemv(
     interpret: bool = True,
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
-    """y = x @ W for engine weights.  ``x``: (..., in_features).
+    """DEPRECATED shim — y = x @ W for engine weights via an EnginePlan.
 
-    ``radix`` selects how many weight bits each bit-serial pass retires
-    (1 = IMAGine radix-2 baseline, 2 = slice4/Booth-radix-4, 4 = nibble
-    pass); semantics are identical, the knob exists so the kernel can be
-    swept exactly like the paper sweeps its PE variants.
+    The old boolean pair maps onto backend names: ``use_pallas=False`` ->
+    ``reference``; ``use_pallas=True`` -> ``pallas_interpret`` /
+    ``pallas_tpu`` depending on ``interpret``.  New code should resolve a
+    plan once (``repro.engine.resolve_plan``) and call ``plan.apply``.
     """
-    if use_pallas:
-        from repro.kernels.bitplane_gemv import ops as _ops
+    from repro.engine import EnginePlan, as_packed
 
-        return _ops.bitplane_gemv(
-            qlin.packed, qlin.scale, x, bits=qlin.bits, radix=radix,
-            interpret=interpret, out_dtype=out_dtype,
-        )
-    return gemv_reference(qlin, x, out_dtype=out_dtype)
+    backend = ("pallas_interpret" if interpret else "pallas_tpu") \
+        if use_pallas else "reference"
+    plan = EnginePlan(backend=backend, bits=qlin.bits, radix=radix)
+    return plan.apply(as_packed(qlin), x, out_dtype=out_dtype)
 
 
 def gemv_reference(qlin: QuantizedLinear, x: jnp.ndarray, out_dtype=jnp.float32):
@@ -153,7 +153,8 @@ def engine_dense(
     use_pallas: bool = False,
     out_dtype=None,
 ):
-    """Uniform linear application used by the serving path of every model.
+    """DEPRECATED shim — use ``repro.models.layers.dense`` with an
+    ``EnginePlan`` (or ``plan.apply`` directly).
 
     If ``engine_bits == 0`` (engine disabled) ``w_or_qlin`` is a plain dense
     matrix and this is a straight matmul (the dry-run baseline).  Otherwise

@@ -1,0 +1,45 @@
+"""Distribution layer: sharding rules, activation hints, compressed
+collectives, pipeline parallelism.
+
+  ``hints``        best-effort with_sharding_constraint wrappers model code
+                   calls unconditionally (no-ops off-mesh)
+  ``sharding``     name-based TP/FSDP param specs + batch/opt/cache specs
+  ``collectives``  int8-wire psum for the cross-pod gradient reduction
+  ``pipeline``     GPipe over the pod axis (microbatch/stack/apply)
+"""
+
+from repro.dist.collectives import compressed_psum_leaf
+from repro.dist.hints import (
+    active_mesh,
+    make_mesh,
+    shard_batch_seq,
+    shard_experts,
+    use_mesh,
+    with_hint,
+)
+from repro.dist.pipeline import microbatch, pipeline_apply, stack_stages
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "active_mesh",
+    "batch_shardings",
+    "cache_shardings",
+    "compressed_psum_leaf",
+    "make_mesh",
+    "microbatch",
+    "opt_state_shardings",
+    "param_shardings",
+    "param_spec",
+    "pipeline_apply",
+    "shard_batch_seq",
+    "shard_experts",
+    "stack_stages",
+    "use_mesh",
+    "with_hint",
+]

@@ -1,0 +1,127 @@
+"""Sharding hints: best-effort ``with_sharding_constraint`` wrappers.
+
+Model code calls these unconditionally; they are no-ops unless a mesh
+context is active (``with mesh:``), and they silently drop any axis name
+the active mesh does not have or that does not divide the corresponding
+array dimension.  That lets one model implementation run unchanged on a
+single CPU device, an 8-device host test mesh, and the 512-chip dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+AxisEntry = Union[None, str, Sequence[str]]
+
+
+def active_mesh():
+    """The mesh entered via :func:`use_mesh` / ``with mesh:``, or None.
+
+    Checks both mesh-context mechanisms: ``jax.sharding.set_mesh`` (newer
+    jax — :func:`use_mesh` prefers it when present, and it does NOT
+    populate the legacy thread-resources slot) and the legacy ``with
+    mesh:`` context.  Missing either would silently turn every sharding
+    hint into a no-op on one side of the version boundary.
+    """
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        try:
+            m = get_abstract()
+            if m is not None and getattr(m, "axis_names", ()):
+                return m
+        except Exception:
+            pass
+    try:
+        from jax._src.mesh import thread_resources
+
+        m = thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def use_mesh(mesh):
+    """Version-portable mesh context manager.
+
+    Newer jax spells this ``jax.sharding.set_mesh``; on older releases the
+    ``Mesh`` object itself is the context manager.  Model-internal sharding
+    hints (:func:`with_hint`) only fire inside this context.
+    """
+    set_mesh = getattr(jax.sharding, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def make_mesh(shape, axis_names):
+    """Version-portable ``jax.make_mesh`` with Auto axis types when the
+    installed jax supports explicit axis typing."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(
+                shape, axis_names,
+                axis_types=(axis_type.Auto,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axis_names)
+
+
+def _filter_entry(entry: AxisEntry, dim: int, axes: dict) -> AxisEntry:
+    """Keep only axis names that exist and whose product divides ``dim``."""
+    if entry is None:
+        return None
+    names = (entry,) if isinstance(entry, str) else tuple(entry)
+    kept = []
+    prod = 1
+    for n in names:
+        size = axes.get(n)
+        if size is None:
+            continue
+        if dim % (prod * size) != 0:
+            continue
+        kept.append(n)
+        prod *= size
+    if not kept:
+        return None
+    return kept[0] if len(kept) == 1 else tuple(kept)
+
+
+def with_hint(x: jnp.ndarray, *entries: AxisEntry) -> jnp.ndarray:
+    """Constrain ``x``'s sharding to ``P(*entries)`` where possible.
+
+    Each positional entry maps to one leading dimension of ``x`` (missing
+    trailing entries mean replicated).  Unknown axes and non-divisible
+    dimensions degrade to replication instead of erroring.
+    """
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    axes = dict(mesh.shape)  # name -> size; works for Mesh and AbstractMesh
+    spec = [
+        _filter_entry(e, x.shape[i], axes)
+        for i, e in enumerate(entries[: x.ndim])
+    ]
+    spec += [None] * (x.ndim - len(spec))
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def shard_batch_seq(x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, D) activations: batch over the data axes, rest replicated."""
+    return with_hint(x, ("pod", "data"))
+
+
+def shard_experts(x: jnp.ndarray) -> jnp.ndarray:
+    """Expert-stacked tensor: the E axis over the ``model`` mesh axis.
+
+    Accepts ``(E, C, D)`` or batched ``(B, E, C, D)`` dispatch buffers.
+    """
+    if x.ndim >= 4:
+        return with_hint(x, None, "model")
+    return with_hint(x, "model")

@@ -1,0 +1,210 @@
+"""Sharding rules: name-based tensor-parallel specs for every param tree
+in the zoo, plus batch / optimizer-state / KV-cache shardings.
+
+The rules are *name-and-shape* driven, not architecture driven: a leaf's
+key path decides the candidate axis (column-parallel QKV/up projections
+shard their output axis, row-parallel out/down projections shard their
+input axis, stacked MoE experts shard the expert axis), and a divisibility
+check against the mesh decides whether the shard actually happens —
+non-divisible dimensions degrade to replication, never error.
+
+All functions accept any object with ``axis_names`` and a ``shape``
+name->size mapping (a real ``jax.sharding.Mesh`` or a test stand-in).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# column-parallel (shard the output-feature axis): activations stay
+# replicated, outputs become model-sharded.
+_COL = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "lm_head"}
+# row-parallel (shard the input-feature axis): consumes model-sharded
+# activations, XLA inserts the reduce.
+_ROW = {"wo", "w_down", "out_proj"}
+_SPECIAL = {"embed"}
+# engine PackedLinear leaves ride the rules of their owning linear.
+_ENGINE_LEAVES = {"packed", "scale", "bias", "w"}
+
+_STACKED_CACHE_KEYS = {
+    "k", "v", "k_scale", "v_scale", "conv", "h",
+    "k_global", "v_global", "k_local", "v_local",
+}
+
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return k.name
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    return str(k)
+
+
+def _mesh_sizes(mesh) -> dict:
+    shape = mesh.shape
+    return dict(shape)
+
+
+def _data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _divisible_prefix(dim: int, axes: Tuple[str, ...], sizes: dict):
+    """Longest prefix of ``axes`` whose size product divides ``dim``."""
+    kept, prod = [], 1
+    for a in axes:
+        if dim <= 0 or dim % (prod * sizes[a]) != 0:
+            break
+        kept.append(a)
+        prod *= sizes[a]
+    return tuple(kept)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def param_spec(path, leaf, mesh, model_axis: str = "model") -> P:
+    """Tensor-parallel PartitionSpec for one param leaf, by key path."""
+    ndim = getattr(leaf, "ndim", 0)
+    spec = [None] * ndim
+    sizes = _mesh_sizes(mesh)
+    msize = sizes.get(model_axis)
+    if not msize or ndim == 0:
+        return P(*spec)
+
+    names = [_key_str(k) for k in path]
+    leafname = names[-1] if names else ""
+    owner = next(
+        (n for n in reversed(names) if n in _COL | _ROW | _SPECIAL), None)
+    if owner is None:
+        return P(*spec)
+
+    def put(ax: int):
+        ax %= ndim
+        if leaf.shape[ax] > 0 and leaf.shape[ax] % msize == 0:
+            spec[ax] = model_axis
+
+    stacked_experts = (
+        "moe" in names
+        and "shared" not in names
+        and owner in _COL | _ROW
+        and leafname in (owner, "packed", "scale")
+        and ndim >= 3
+    )
+    if owner == "embed":
+        if ndim >= 2:
+            put(-2)  # vocab axis: (vocab, d) or audio (K, vocab, d)
+    elif stacked_experts:
+        put(ndim - 3)  # the expert axis of (..., E, D_in, D_out)
+    elif owner in _COL:
+        put(-1)
+    elif owner in _ROW:
+        if leafname == "bias":
+            pass  # row-parallel bias spans the full output axis
+        elif ndim >= 2:
+            put(-2)
+    return P(*spec)
+
+
+def _with_fsdp(spec: P, leaf, mesh) -> P:
+    """Layer ZeRO/FSDP on top of TP: shard the first still-replicated,
+    divisible axis over the data axes (params + optimizer state of 100B+
+    configs cannot fit TP-only)."""
+    data_axes = _data_axes(mesh)
+    if not data_axes:
+        return spec
+    sizes = _mesh_sizes(mesh)
+    prod = 1
+    for a in data_axes:
+        prod *= sizes[a]
+    if prod == 1:
+        return spec
+    entries = list(spec) + [None] * (leaf.ndim - len(spec))
+    for ax in range(leaf.ndim):
+        if entries[ax] is None and leaf.shape[ax] > 0 \
+                and leaf.shape[ax] % prod == 0:
+            entries[ax] = data_axes if len(data_axes) > 1 else data_axes[0]
+            return P(*entries)
+    return spec
+
+
+def param_shardings(mesh, params: Pytree, mode: str = "tp") -> Pytree:
+    """NamedSharding tree for a param tree.  ``mode``: "tp" | "fsdp"."""
+
+    def one(path, leaf):
+        spec = param_spec(path, leaf, mesh)
+        if mode == "fsdp":
+            spec = _with_fsdp(spec, leaf, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(mesh, opt_state: Pytree, mode: str = "tp") -> Pytree:
+    """Optimizer/EF state shardings: moment trees mirror the param tree's
+    key names, so the same name-based rules apply; scalars replicate."""
+    return param_shardings(mesh, opt_state, mode=mode)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(mesh, batch: Pytree) -> Pytree:
+    """Batch-axis sharding over the data axes (``("pod", "data")`` when the
+    pod axis carries data parallelism)."""
+    data_axes = _data_axes(mesh)
+    sizes = _mesh_sizes(mesh)
+
+    def one(leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        if ndim == 0 or not data_axes:
+            return NamedSharding(mesh, P(*([None] * ndim)))
+        kept = _divisible_prefix(leaf.shape[0], data_axes, sizes)
+        spec = [kept if kept else None] + [None] * (ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(mesh, cache: Pytree) -> Pytree:
+    """Decode-cache shardings: the batch (slot) axis over the data axes and
+    KV heads over the model axis when divisible.
+
+    Handles both the stacked ``(L, B, ...)`` layout and the unstacked
+    tuple-of-``(B, ...)`` production layout.
+    """
+    data_axes = _data_axes(mesh)
+    sizes = _mesh_sizes(mesh)
+    msize = sizes.get("model", 0)
+
+    def one(path, leaf):
+        ndim = getattr(leaf, "ndim", 0)
+        spec = [None] * ndim
+        if ndim == 0:
+            return NamedSharding(mesh, P())
+        names = [_key_str(k) for k in path]
+        top = names[0] if names else ""
+        unstacked = any(
+            isinstance(k, jax.tree_util.SequenceKey) for k in path)
+        batch_ax = 0 if (top == "pos" or unstacked or ndim < 2) else 1
+        kept = _divisible_prefix(leaf.shape[batch_ax], data_axes, sizes)
+        if kept:
+            spec[batch_ax] = kept
+        if (top in ("k", "v", "k_global", "v_global", "k_local", "v_local")
+                and ndim >= 4 and msize
+                and leaf.shape[-2] % msize == 0 and leaf.shape[-2] > 0):
+            spec[-2] = "model"  # KV-head axis
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

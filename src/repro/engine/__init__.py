@@ -1,0 +1,67 @@
+"""The IMAGine GEMV engine's single front door.
+
+Three pieces, one API:
+
+  * :class:`PackedLinear` — the unified bit-packed weight pytree
+    (replaces ``QuantizedLinear`` and the ``{"packed", "scale"}`` dicts);
+  * the backend registry — ``reference`` / ``bit_serial`` /
+    ``pallas_interpret`` / ``pallas_tpu``, extensible via
+    :func:`register_backend`, auto-selected from ``jax.default_backend()``;
+  * :class:`EnginePlan` — resolved once from :class:`EngineConfig` via
+    :func:`resolve_plan` and threaded through models / serve / launch /
+    benchmarks as a single object.
+
+Typical use::
+
+    from repro.engine import pack_linear, resolve_plan
+
+    plan = resolve_plan(run.serve.engine)        # once, at setup
+    lin = pack_linear(w, plan.bits)              # weight-stationary pack
+    y = plan.apply(lin, x)                       # hot path
+
+Legacy entry points (``repro.core.gemv_engine.gemv`` / ``engine_dense``,
+``models.layers.engine_apply``) remain as thin deprecation shims over this
+package.
+"""
+
+from repro.engine.backends import (
+    available_backends,
+    default_backend,
+    default_interpret,
+    get_backend,
+    register_backend,
+    resolve_backend_name,
+)
+from repro.engine.packed import (
+    PackedLinear,
+    as_packed,
+    as_param_dict,
+    is_packed,
+    pack_linear,
+    validate_bits,
+)
+from repro.engine.plan import (
+    EnginePlan,
+    as_plan,
+    plan_for_bits,
+    resolve_plan,
+)
+
+__all__ = [
+    "EnginePlan",
+    "PackedLinear",
+    "as_packed",
+    "as_param_dict",
+    "as_plan",
+    "available_backends",
+    "default_backend",
+    "default_interpret",
+    "get_backend",
+    "is_packed",
+    "pack_linear",
+    "plan_for_bits",
+    "register_backend",
+    "resolve_backend_name",
+    "resolve_plan",
+    "validate_bits",
+]

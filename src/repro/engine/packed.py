@@ -1,0 +1,153 @@
+"""``PackedLinear`` — the one weight format of the IMAGine GEMV engine.
+
+Historically the engine had two incompatible weight containers:
+
+  * ``repro.core.gemv_engine.QuantizedLinear`` (a NamedTuple) on the
+    kernel-facing path, and
+  * ad-hoc ``{"packed", "scale", "bits"?}`` param dicts emitted by
+    ``repro.models.transformer.quantize_params`` on the model path.
+
+``PackedLinear`` replaces both: a frozen dataclass registered as a JAX
+pytree, so it survives ``jax.jit``, ``jax.lax.scan`` over stacked layers,
+``jax.tree.map``, ``jax.eval_shape`` and checkpointing.  ``packed`` /
+``scale`` / ``bias`` are traced leaves; ``bits`` and the feature sizes are
+static metadata carried through every transformation.
+
+``bits`` is validated once, at pack time, and is *authoritative*: every
+backend reads the precision from the weight container, never from a config
+default (the old code silently fell back to 8 when no config was passed).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bitplane import pack_weights, unpack_weights
+from repro.core.quantize import quantize_symmetric
+
+VALID_BITS = (2, 4, 8)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("packed", "scale", "bias"),
+    meta_fields=("bits", "in_features", "out_features"),
+)
+@dataclasses.dataclass(frozen=True)
+class PackedLinear:
+    """Weight-stationary bit-packed linear: ``y = x @ W [+ bias]``.
+
+    ``packed``: int8, ``(..., in_features * bits // 8, out_features)`` —
+    the contraction (K) axis is bit-packed, so HBM holds exactly ``bits/8``
+    bytes per weight (the paper's memory-capacity scaling argument).
+    Leading axes, if any, are stacked layers / experts.
+    ``scale``: float32, ``(..., 1, out_features)`` per-output-channel scales.
+    ``bias``: optional float, ``(..., out_features)``.
+    ``bits``: static python int in ``{2, 4, 8}``.
+    """
+
+    packed: jnp.ndarray
+    scale: jnp.ndarray
+    bias: Optional[jnp.ndarray] = None
+    bits: int = 8
+    in_features: int = 0
+    out_features: int = 0
+
+    # -------------------------------------------------------------- helpers
+    @property
+    def per_byte(self) -> int:
+        return 8 // self.bits
+
+    def dequantize(self, dtype=jnp.float32) -> jnp.ndarray:
+        """Reconstruct the float weight matrix (K-axis unpacked)."""
+        q = unpack_weights(self.packed, self.bits, axis=-2)
+        return (q.astype(jnp.float32) * self.scale).astype(dtype)
+
+    def nbytes(self) -> int:
+        n = self.packed.size * self.packed.dtype.itemsize
+        n += self.scale.size * self.scale.dtype.itemsize
+        if self.bias is not None:
+            n += self.bias.size * self.bias.dtype.itemsize
+        return int(n)
+
+
+def validate_bits(bits: Any) -> int:
+    if bits is None:
+        raise ValueError(
+            "engine weight precision is unset: PackedLinear.bits is "
+            "authoritative and must be one of {2, 4, 8} (0 means 'engine "
+            "disabled' and is only valid on EngineConfig.weight_bits)")
+    bits = int(bits)
+    if bits not in VALID_BITS:
+        raise ValueError(f"bits must be one of {VALID_BITS}, got {bits}")
+    return bits
+
+
+def pack_linear(
+    w: jnp.ndarray,
+    bits: int = 8,
+    *,
+    bias: Optional[jnp.ndarray] = None,
+) -> PackedLinear:
+    """Quantize + bit-pack a float ``(..., K, N)`` weight into engine form."""
+    bits = validate_bits(bits)
+    if w.ndim < 2:
+        raise ValueError(f"weight must be at least 2D (K, N), got {w.shape}")
+    k, n = w.shape[-2], w.shape[-1]
+    if (k * bits) % 8 != 0:
+        raise ValueError(
+            f"in_features {k} * bits {bits} must pack into whole int8 words")
+    q, scale = quantize_symmetric(w, bits, axis=-2)
+    packed = pack_weights(q, bits, axis=-2)
+    return PackedLinear(packed, scale, bias, bits, k, n)
+
+
+def as_packed(p: Any, *, bits_hint: Optional[int] = None) -> PackedLinear:
+    """Normalize any legacy engine weight container into ``PackedLinear``.
+
+    Accepts ``PackedLinear`` (identity), the deprecated ``QuantizedLinear``
+    NamedTuple, and the deprecated ``{"packed", "scale"[, "bits", "bias"]}``
+    param dict.  A legacy dict that carries no ``bits`` key must be paired
+    with an explicit ``bits_hint`` (from an :class:`EnginePlan`) — there is
+    no silent default-to-8 anymore.
+    """
+    if isinstance(p, PackedLinear):
+        return p
+    # QuantizedLinear and other NamedTuple-likes with the same fields
+    if hasattr(p, "packed") and hasattr(p, "scale") and hasattr(p, "bits"):
+        bits = validate_bits(p.bits)
+        k = getattr(p, "in_features", p.packed.shape[-2] * (8 // bits))
+        n = getattr(p, "out_features", p.packed.shape[-1])
+        return PackedLinear(p.packed, p.scale, None, bits, k, n)
+    if isinstance(p, dict) and "packed" in p:
+        bits = p.get("bits", bits_hint)
+        bits = validate_bits(bits)
+        packed = p["packed"]
+        k = packed.shape[-2] * (8 // bits)
+        n = packed.shape[-1]
+        return PackedLinear(packed, p["scale"], p.get("bias"), bits, k, n)
+    raise TypeError(
+        f"cannot interpret {type(p).__name__} as an engine PackedLinear")
+
+
+def as_param_dict(lin: PackedLinear) -> dict:
+    """Back-compat view for code still expecting the legacy dict format."""
+    out = {"packed": lin.packed, "scale": lin.scale, "bits": lin.bits}
+    if lin.bias is not None:
+        out["bias"] = lin.bias
+    return out
+
+
+def is_packed(p: Any) -> bool:
+    """True for any engine weight container (new or legacy)."""
+    return (
+        isinstance(p, PackedLinear)
+        or (isinstance(p, dict) and "packed" in p)
+        or (hasattr(p, "packed") and hasattr(p, "scale")
+            and hasattr(p, "bits"))
+    )

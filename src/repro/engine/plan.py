@@ -1,0 +1,139 @@
+"""``EnginePlan`` — the single resolved dispatch object of the GEMV engine.
+
+A plan is resolved **once** per run (from :class:`EngineConfig`, at
+``ServeEngine`` construction / dry-run cell build / benchmark setup) and
+then threaded as one value through ``models.layers.dense``, the serving
+engine, the launch cells and the benchmarks.  Everything the hot path needs
+is pinned here: the backend, the digit radix, kernel tile sizes and the
+output dtype.  No call-site decides ``use_pallas`` / ``interpret`` booleans
+anymore — that decision lives in the backend registry.
+
+``resolve_plan`` is memoized on the (frozen, hashable) ``EngineConfig``, so
+"resolved once" is literal: repeated calls with the same config return the
+same plan object.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+from repro.engine.backends import get_backend, resolve_backend_name
+from repro.engine.packed import PackedLinear, as_packed, validate_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePlan:
+    """Fully-resolved engine dispatch: who computes, at what precision.
+
+    ``backend``: concrete registry name (never ``"auto"``).
+    ``bits``: configured weight precision — used when *packing* weights;
+        at apply time the weight container's own ``bits`` is authoritative.
+    ``radix``: weight bits retired per bit-serial pass (1 = IMAGine radix-2
+        baseline, 2 = slice4/Booth-radix-4, 4 = nibble pass).
+    ``kv_bits``: beyond-paper bit-planed KV cache (0 = off, 8 = int8).
+    ``out_dtype``: None means "match the activation dtype".
+    ``block_*``: Pallas kernel tile sizes (batch, PE-column, K-stream).
+    """
+
+    backend: str
+    bits: int
+    radix: int = 1
+    kv_bits: int = 0
+    out_dtype: Any = None
+    block_b: int = 128
+    block_n: int = 256
+    block_k: int = 512
+
+    def __post_init__(self):
+        validate_bits(self.bits)
+        if self.radix not in (1, 2, 4, 8):
+            raise ValueError(f"radix must be 1/2/4/8, got {self.radix}")
+        if self.bits % self.radix != 0:
+            raise ValueError(
+                f"radix {self.radix} must divide bits {self.bits}")
+        # resolve + validate the backend name eagerly: a typo fails at plan
+        # resolution, not in the middle of a jitted decode step.
+        object.__setattr__(
+            self, "backend", resolve_backend_name(self.backend))
+
+    # ------------------------------------------------------------------ api
+    def apply(self, lin, x: jnp.ndarray, *, out_dtype=None) -> jnp.ndarray:
+        """``y = x @ W [+ bias]`` through this plan's backend.
+
+        ``lin`` may be a :class:`PackedLinear` or any legacy container
+        (``QuantizedLinear``, ``{"packed", "scale"}`` dict) — normalized
+        here, with this plan's ``bits`` as the hint for bit-less legacy
+        dicts.  ``x``: ``(..., in_features)``; 1D inputs are treated as a
+        single row and squeezed back.
+        """
+        lin = as_packed(lin, bits_hint=self.bits)
+        od = out_dtype or self.out_dtype or x.dtype
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[None, :]
+        y = get_backend(self.backend)(self, lin, x, od)
+        if lin.bias is not None:
+            y = y + lin.bias.astype(y.dtype)
+        return y[0] if squeeze else y
+
+    def pack(self, w: jnp.ndarray, *, bias=None) -> PackedLinear:
+        """Pack a float weight at this plan's configured precision."""
+        from repro.engine.packed import pack_linear
+
+        return pack_linear(w, self.bits, bias=bias)
+
+    def replace(self, **kw) -> "EnginePlan":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# resolution from config
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
+    if not cfg.enabled:
+        return None
+    name = backend or getattr(cfg, "backend", "auto") or "auto"
+    if name == "auto" and not getattr(cfg, "use_pallas", True):
+        # legacy knob: use_pallas=False meant "exact jnp path, please".
+        name = "reference"
+    return EnginePlan(
+        backend=resolve_backend_name(name),
+        bits=cfg.weight_bits,
+        radix=cfg.radix,
+        kv_bits=cfg.kv_bits,
+        block_n=cfg.tile_m,
+        block_k=cfg.tile_k,
+    )
+
+
+def resolve_plan(cfg, *, backend: Optional[str] = None) -> Optional[EnginePlan]:
+    """``EngineConfig`` (or None) -> resolved ``EnginePlan`` (or None).
+
+    None / a disabled config (``weight_bits == 0``) resolve to None — the
+    plain dense path.  ``backend`` overrides the config's backend field.
+    Passing an already-resolved plan returns it unchanged.
+    """
+    if cfg is None:
+        return None
+    if isinstance(cfg, EnginePlan):
+        return cfg
+    return _resolve_cached(cfg, backend)
+
+
+def as_plan(eng) -> Optional[EnginePlan]:
+    """Normalize the model-path ``eng`` argument (EngineConfig | EnginePlan
+    | None) into an Optional[EnginePlan].  The one entry point model code
+    calls; cached, so threading it per-forward is free."""
+    return resolve_plan(eng)
+
+
+def plan_for_bits(bits: int, *, backend: str = "auto") -> EnginePlan:
+    """A standalone plan (no config) — e.g. for a weight packed directly."""
+    return EnginePlan(backend=resolve_backend_name(backend), bits=bits)

@@ -2,13 +2,15 @@
 
 Handles arbitrary (B, K, N): pads every axis up to block multiples (zero
 padding is exact for GEMV), dispatches the Pallas kernel, and slices the
-result back.  ``interpret=True`` runs the kernel body on CPU for validation;
-on TPU hardware pass ``interpret=False``.
+result back.  ``interpret=None`` (default) asks the engine backend registry
+(``repro.engine.default_interpret``): interpret mode off-TPU, compiled on
+TPU hardware — so the same call-site works everywhere.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax.numpy as jnp
 
@@ -29,9 +31,12 @@ def bitplane_gemv(
     block_b: int = 128,
     block_n: int = 256,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
+    from repro.engine.backends import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None, :]

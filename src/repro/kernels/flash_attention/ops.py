@@ -21,8 +21,11 @@ def flash_attention(
     window: int = 0,
     block_q: int = 128,
     block_kv: int = 128,
-    interpret: bool = True,
+    interpret: "bool | None" = None,
 ) -> jnp.ndarray:
+    from repro.engine.backends import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     b, s, hq, d = q.shape
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)

@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.kernels.int8_matvec.kernel import int8_matvec_pallas
@@ -19,9 +21,12 @@ def int8_matvec(
     block_b: int = 128,
     block_n: int = 256,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     out_dtype=jnp.float32,
 ) -> jnp.ndarray:
+    from repro.engine.backends import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     squeeze = x.ndim == 1
     if squeeze:
         x = x[None, :]

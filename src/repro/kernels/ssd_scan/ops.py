@@ -7,11 +7,14 @@ import jax.numpy as jnp
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 
 
-def ssd_scan(xdt, la, b_in, c_in, *, chunk: int = 128, interpret: bool = True):
+def ssd_scan(xdt, la, b_in, c_in, *, chunk: int = 128,
+             interpret: "bool | None" = None):
     """y, h_final = SSD(xdt, exp(la), B, C) — kernel entry point.
 
     xdt: (B, S, H, P) dt-premultiplied head inputs; la: (B, S, H) log decay;
     b_in/c_in: (B, S, N) state projections.
     """
+    from repro.engine.backends import resolve_interpret
+
     return ssd_scan_pallas(xdt, la, b_in, c_in, chunk=chunk,
-                           interpret=interpret)
+                           interpret=resolve_interpret(interpret))

@@ -30,6 +30,7 @@ import jax           # noqa: E402
 
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              engine_bits: int = 0, engine_radix: int = 1, kv_bits: int = 0,
+             engine_backend: str = "reference",
              split_local: bool = False, remat: str = "block",
              microbatches: int = 1, grad_compress_bits: int = 0,
              out_dir: str = "experiments/dryrun", tag: str = "") -> dict:
@@ -51,8 +52,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             f"{arch} is pure full-attention: long_500k is skipped by design "
             "(see DESIGN.md §Arch-applicability)")
 
+    # the 512-host-device dry-run lowers on CPU: pin the exact jnp backend
+    # (Pallas TPU kernels do not lower on the CPU backend)
     eng = EngineConfig(weight_bits=engine_bits, radix=engine_radix,
-                       kv_bits=kv_bits, use_pallas=False)
+                       kv_bits=kv_bits, backend=engine_backend)
     run = RunConfig(
         model=cfg,
         shape=shape,
@@ -66,8 +69,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     n_dev = mesh.devices.size
     kw = {"split_local": split_local} if shape.kind == "decode" else {}
 
+    from repro.dist import use_mesh
+
     t0 = time.time()
-    with jax.sharding.set_mesh(mesh):
+    with use_mesh(mesh):
         fn, args, kind = build_cell(run, mesh, **kw)
         lowered = fn.lower(*args)
         t_lower = time.time() - t0
@@ -106,6 +111,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "kind": kind,
         "engine_bits": engine_bits,
         "engine_radix": engine_radix,
+        "engine_backend": engine_backend if engine_bits else "",
         "split_local": split_local,
         "remat": remat,
         "microbatches": microbatches,
@@ -146,6 +152,8 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--engine-bits", type=int, default=0)
     ap.add_argument("--engine-radix", type=int, default=1)
+    ap.add_argument("--engine-backend", default="reference",
+                    help="engine backend registry name (see repro.engine)")
     ap.add_argument("--split-local", action="store_true")
     ap.add_argument("--remat", default="block")
     ap.add_argument("--microbatches", type=int, default=1)
@@ -155,6 +163,7 @@ def main():
     args = ap.parse_args()
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              engine_bits=args.engine_bits, engine_radix=args.engine_radix,
+             engine_backend=args.engine_backend,
              split_local=args.split_local, remat=args.remat,
              microbatches=args.microbatches,
              grad_compress_bits=args.grad_compress_bits,

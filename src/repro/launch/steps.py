@@ -25,6 +25,7 @@ from repro.dist.sharding import (
     opt_state_shardings,
     param_shardings,
 )
+from repro.engine import resolve_plan
 from repro.models import decode_step, init_cache, init_params
 from repro.models.transformer import prefill, quantize_params
 from repro.optim import make_optimizer
@@ -85,8 +86,8 @@ def train_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
 
 def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     cfg, shape = run.model, run.shape
-    eng = run.serve.engine if run.serve.engine.enabled else None
-    bits = eng.weight_bits if eng else 0
+    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    bits = plan.bits if plan else 0
     ap_sh = sharded_abstract_params(cfg, mesh, bits)
 
     seq = shape.seq_len
@@ -100,7 +101,7 @@ def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     acache_sh = _attach(acache, cache_shardings(mesh, acache))
 
     fn = jax.jit(
-        lambda params, batch, cache: prefill(params, batch, cfg, cache, eng),
+        lambda params, batch, cache: prefill(params, batch, cfg, cache, plan),
         donate_argnums=(2,),
     )
     return fn, (ap_sh, abatch_sh, acache_sh)
@@ -111,11 +112,11 @@ def serve_cell(run: RunConfig, mesh, split_local: bool = False,
     """Decode cells default to the unstacked per-layer cache layout (no
     stacked scan carry — the production decode graph)."""
     cfg, shape = run.model, run.shape
-    eng = run.serve.engine if run.serve.engine.enabled else None
-    bits = eng.weight_bits if eng else 0
+    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    bits = plan.bits if plan else 0
     ap_sh = sharded_abstract_params(cfg, mesh, bits)
 
-    kv_bits = eng.kv_bits if eng else 0
+    kv_bits = plan.kv_bits if plan else 0
     acache = jax.eval_shape(
         functools.partial(init_cache, cfg, shape.global_batch, shape.seq_len,
                           split_local=split_local, stacked=stacked,
@@ -129,7 +130,7 @@ def serve_cell(run: RunConfig, mesh, split_local: bool = False,
 
     fn = jax.jit(
         lambda params, cache, tokens: decode_step(params, cache, tokens, cfg,
-                                                  eng),
+                                                  plan),
         donate_argnums=(1,),
     )
     return fn, (ap_sh, acache_sh, atoks_sh)

@@ -23,8 +23,9 @@ FLASH_BLOCK_KV = 1024
 # On TPU hardware flip this to route attend_flash through the fused Pallas
 # kernel (kernels/flash_attention): scores and softmax stats stay in VMEM,
 # collapsing attention HBM traffic to Q/K/V/O.  The CPU dry-run keeps the
-# jnp path (Pallas TPU kernels do not lower on the CPU backend); the kernel
-# itself is validated in interpret mode against attend_dense.
+# jnp path; the kernel wrapper picks interpret-vs-compiled itself from the
+# engine backend registry (repro.engine.default_interpret), so flipping
+# this flag is safe on any host.
 PALLAS_FLASH = False
 
 
@@ -104,7 +105,7 @@ def attend_flash(
     if PALLAS_FLASH and isinstance(window, int):
         from repro.kernels.flash_attention.ops import flash_attention
 
-        return flash_attention(q, k, v, window=window, interpret=False)
+        return flash_attention(q, k, v, window=window)
     b, s, hq, d = q.shape
     n_kv = k.shape[2]
     g = hq // n_kv

@@ -2,19 +2,25 @@
 SwiGLU MLP, embeddings.
 
 Every matmul in the zoo goes through :func:`dense`, which dispatches between
-a plain matrix and the engine's packed-quantized format — this is how the
-paper's GEMV engine becomes a first-class, model-agnostic serving feature.
+a plain matrix and the engine's :class:`~repro.engine.PackedLinear` format —
+this is how the paper's GEMV engine becomes a first-class, model-agnostic
+serving feature.  Engine dispatch is an :class:`~repro.engine.EnginePlan`
+(resolved once from :class:`EngineConfig` by the caller and threaded down);
+``eng`` arguments still accept a raw ``EngineConfig`` for back-compat and
+are normalized through the memoized ``as_plan``.
 """
 
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 
 from repro.config.base import EngineConfig
-from repro.core.bitplane import unpack_weights
+from repro.engine import EnginePlan, as_packed, as_plan, is_packed, plan_for_bits
+
+Engine = Optional[Union[EngineConfig, EnginePlan]]
 
 
 # ---------------------------------------------------------------------------
@@ -23,42 +29,36 @@ from repro.core.bitplane import unpack_weights
 
 
 def is_quantized(p) -> bool:
-    return isinstance(p, dict) and "packed" in p
+    return is_packed(p)
 
 
-def engine_apply(p: dict, x: jnp.ndarray, eng: Optional[EngineConfig]) -> jnp.ndarray:
-    """IMAGine engine forward for a packed linear param dict.
+def engine_apply(p, x: jnp.ndarray, eng: Engine) -> jnp.ndarray:
+    """IMAGine engine forward for a packed linear (DEPRECATED shim name —
+    new code calls ``plan.apply(lin, x)`` directly).
 
-    jnp path (always valid, used for CPU + dry-run lowering); the Pallas
-    kernel path is taken for 2D weights when requested.  Bytes read from
-    "HBM" are ``bits/8`` per weight either way — the roofline-relevant
-    property of the engine.
+    Accepts ``PackedLinear`` or the legacy ``{"packed", "scale"}`` dict;
+    the weight's own ``bits`` is authoritative.  Bytes read from "HBM" are
+    ``bits/8`` per weight on every backend — the roofline-relevant property
+    of the engine.
     """
-    bits = int(p.get("bits", eng.weight_bits if eng else 8))
-    packed, scale = p["packed"], p["scale"]
-    if eng is not None and eng.use_pallas and packed.ndim == 2 and x.ndim <= 2:
-        from repro.kernels.bitplane_gemv.ops import bitplane_gemv
-
-        return bitplane_gemv(
-            packed, scale, x, bits=bits, radix=eng.radix,
-            interpret=True, out_dtype=x.dtype,
-        )
-    w = unpack_weights(packed, bits, axis=-2).astype(jnp.float32)
-    y = jnp.matmul(x.astype(jnp.float32), w) * scale
-    return y.astype(x.dtype)
+    plan = as_plan(eng)
+    lin = as_packed(p, bits_hint=plan.bits if plan else None)
+    if plan is None:
+        # packed weights but no engine config: dispatch at the weight's own
+        # precision on the auto backend (no silent bits=8 fallback).
+        plan = plan_for_bits(lin.bits)
+    return plan.apply(lin, x)
 
 
-def dense(p, x: jnp.ndarray, eng: Optional[EngineConfig] = None) -> jnp.ndarray:
+def dense(p, x: jnp.ndarray, eng: Engine = None) -> jnp.ndarray:
     """y = x @ W with optional bias; W may be engine-packed."""
     if is_quantized(p):
-        bias = p.get("bias")
-        y = engine_apply(p, x, eng)
+        return engine_apply(p, x, eng)  # plan applies the bias itself
+    if isinstance(p, dict):
+        w, bias = p["w"], p.get("bias")
     else:
-        if isinstance(p, dict):
-            w, bias = p["w"], p.get("bias")
-        else:
-            w, bias = p, None
-        y = jnp.matmul(x, w.astype(x.dtype))
+        w, bias = p, None
+    y = jnp.matmul(x, w.astype(x.dtype))
     if bias is not None:
         y = y + bias.astype(y.dtype)
     return y

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.config.base import EngineConfig, ModelConfig
 from repro.dist.hints import shard_experts, with_hint
+from repro.engine import as_plan
 from repro.models.layers import dense, engine_apply, init_linear, is_quantized, swiglu
 
 # EP dispatch mode.  "a2a" (default) pins the dispatch buffer's sharding on
@@ -83,6 +84,7 @@ def moe_block(
     dispatch buffer, which XLA lowers to an all-to-all: exactly the EP
     pattern the roofline's collective term should see.
     """
+    eng = as_plan(eng)
     squeeze = x.ndim == 2
     if squeeze:
         x = x[None]

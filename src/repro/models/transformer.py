@@ -20,9 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.config.base import EngineConfig, ModelConfig
-from repro.core.bitplane import pack_weights
-from repro.core.quantize import quantize_symmetric
 from repro.dist.hints import shard_batch_seq
+from repro.engine import as_plan, pack_linear
 from repro.models.attention import (
     FLASH_THRESHOLD,
     attend_decode,
@@ -240,6 +239,7 @@ def forward(
     (hidden, aux_loss) with ``return_hidden`` (the chunked-CE train path
     computes the LM head per sequence chunk instead of materializing the
     full (B, S, vocab) logits)."""
+    eng = as_plan(eng)  # EngineConfig | EnginePlan | None -> resolved plan
     x, positions = embed_inputs(params, batch, cfg)
     x = shard_batch_seq(x)
     s = x.shape[1]
@@ -338,6 +338,7 @@ def chunked_ce(params: Params, hidden: jnp.ndarray, labels: jnp.ndarray,
     large-vocab memory optimization (MaxText-style); numerically identical
     to ``loss_fn(_lm_logits(hidden))``.
     """
+    eng = as_plan(eng)
     b, s = hidden.shape[:2]
     chunk = min(chunk, s)
     if s % chunk != 0:
@@ -447,6 +448,7 @@ def prefill(
     chunked-flash forward as training (no S^2 blocks); K/V per layer are
     collected as scan outputs and written into the cache.
     """
+    eng = as_plan(eng)
     x, positions = embed_inputs(params, batch, cfg)
     x = shard_batch_seq(x)
     b, s = x.shape[:2]
@@ -659,6 +661,7 @@ def decode_step(
     eng: Optional[EngineConfig] = None,
 ) -> Tuple[jnp.ndarray, Params]:
     """One token of autoregressive decode.  Returns (logits, new_cache)."""
+    eng = as_plan(eng)
     pos = cache["pos"]                   # (B,)
     if cfg.family == "audio":
         x = sum(
@@ -844,13 +847,9 @@ _QUANT_KEYS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
 
 def quantize_params(params: Params, cfg: ModelConfig, bits: int = 8) -> Params:
     """Convert trained params into IMAGine-engine serving format: every
-    large linear becomes {"packed", "scale"} (bit-packed along the
-    contraction axis).  Embeddings, norms, convs, router stay dense."""
-
-    def _quant_leaf(arr):
-        q, scale = quantize_symmetric(arr, bits, axis=-2)
-        return {"packed": pack_weights(q, bits, axis=-2),
-                "scale": scale}
+    large linear becomes a :class:`~repro.engine.PackedLinear` (bit-packed
+    along the contraction axis, ``bits`` validated and frozen into the
+    pytree at pack time).  Embeddings, norms, convs, router stay dense."""
 
     def walk(node, name: str = ""):
         if isinstance(node, dict):
@@ -858,12 +857,9 @@ def quantize_params(params: Params, cfg: ModelConfig, bits: int = 8) -> Params:
             for k, v in node.items():
                 if k in _QUANT_KEYS:
                     if isinstance(v, dict) and "w" in v:  # {"w", "bias"?}
-                        qd = _quant_leaf(v["w"])
-                        if "bias" in v:
-                            qd["bias"] = v["bias"]
-                        out[k] = qd
+                        out[k] = pack_linear(v["w"], bits, bias=v.get("bias"))
                     elif isinstance(v, jnp.ndarray) and v.ndim >= 2:
-                        out[k] = _quant_leaf(v)           # stacked experts
+                        out[k] = pack_linear(v, bits)     # stacked experts
                     else:
                         out[k] = walk(v, k)
                 else:

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import EngineConfig, ModelConfig, ServeConfig
+from repro.engine import resolve_plan
 from repro.models import decode_step, init_cache, quantize_params
 from repro.models.transformer import prefill
 from repro.serve.sampler import sample
@@ -50,10 +51,13 @@ class ServeEngine:
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
-        eng = self.scfg.engine
-        self.eng = eng if eng.enabled else None
-        if eng.enabled:
-            params = quantize_params(params, cfg, eng.weight_bits)
+        # the EngineConfig is resolved into an EnginePlan exactly once, at
+        # construction; the plan is the only engine object the decode loop
+        # ever sees.
+        self.plan = resolve_plan(self.scfg.engine)
+        self.eng = self.plan  # back-compat alias
+        if self.plan is not None:
+            params = quantize_params(params, cfg, self.plan.bits)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -65,11 +69,11 @@ class ServeEngine:
         self._next_rid = 0
 
         cfg_ = self.cfg
-        eng_ = self.eng
+        plan_ = self.plan
 
         @jax.jit
         def _step(params, cache, tokens):
-            return decode_step(params, cache, tokens, cfg_, eng_)
+            return decode_step(params, cache, tokens, cfg_, plan_)
 
         self._step = _step
 

@@ -1,0 +1,75 @@
+"""Minimal deterministic stand-in for the tiny `hypothesis` API surface
+these tests use (``given``, ``settings``, ``st.integers``,
+``st.sampled_from``).
+
+The container image does not ship hypothesis; rather than losing the
+property tests at collection time, this shim replays each property with a
+fixed number of seeded pseudo-random examples.  It is NOT a shrinking
+property-testing engine — when real hypothesis is installed it is used
+instead (see the try/except import in each test module).
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+_DEFAULT_EXAMPLES = 15
+
+
+class _Strategy:
+    def __init__(self, sampler):
+        self._sampler = sampler
+
+    def sample(self, rng: random.Random):
+        return self._sampler(rng)
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+    @staticmethod
+    def floats(min_value, max_value):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(runner, "_shim_max_examples", _DEFAULT_EXAMPLES)
+            rng = random.Random(fn.__qualname__)  # deterministic per test
+            for _ in range(n):
+                draw = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **kwargs, **draw)
+
+        # pytest must not see the strategy parameters as fixtures: expose
+        # the original signature minus the drawn arguments.
+        params = [p for name, p in
+                  inspect.signature(fn).parameters.items()
+                  if name not in strats]
+        runner.__signature__ = inspect.Signature(params)
+        del runner.__wrapped__
+        return runner
+
+    return deco

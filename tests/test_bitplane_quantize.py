@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.bitplane import (
     from_bitplanes,

@@ -13,6 +13,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.config.base import MeshConfig
+from repro.dist import make_mesh, use_mesh
 from repro.dist.sharding import batch_shardings, param_spec, param_shardings
 from repro.launch.steps import abstract_params
 
@@ -88,8 +89,7 @@ class TestParamSpecs:
 
     def test_batch_sharded_on_data_axes(self):
         cfg = reduced_f32("qwen2.5-3b")
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_mesh((1, 1), ("data", "model"))
         ab = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
         sh = batch_shardings(mesh, ab)
         assert sh["tokens"].spec == P(("data",), None)
@@ -105,6 +105,7 @@ class TestMultiDevice:
         from repro.train.trainer import make_train_step
         from repro.optim import make_optimizer
         from repro.launch.steps import _attach
+        from repro.dist import make_mesh, use_mesh
         from repro.dist.sharding import param_shardings, batch_shardings, opt_state_shardings
         from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -120,9 +121,8 @@ class TestMultiDevice:
         p1, o1, _, m1 = step(params, opt, {}, batch)
 
         # sharded
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
             ps = param_shardings(mesh, params)
             params_s = jax.device_put(params, ps)
             opt_s = jax.device_put(opt, opt_state_shardings(mesh, opt))
@@ -166,15 +166,15 @@ class TestMultiDevice:
         _run_sub("""
         from conftest import reduced_f32
         from repro.models import init_params, init_cache, decode_step
+        from repro.dist import make_mesh, use_mesh
         from repro.dist.sharding import param_shardings, cache_shardings
         cfg = reduced_f32("gemma3-27b")
         params = init_params(cfg, jax.random.PRNGKey(0))
         cache = init_cache(cfg, 2, max_len=16)
         tok = jnp.ones((2, 1), jnp.int32)
         l1, c1 = decode_step(params, cache, tok, cfg)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
-        with jax.sharding.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with use_mesh(mesh):
             ps = jax.device_put(params, param_shardings(mesh, params))
             cs = jax.device_put(cache, cache_shardings(mesh, cache))
             l2, c2 = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))(ps, cs, tok)

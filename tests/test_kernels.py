@@ -4,7 +4,10 @@ pure-jnp oracles (interpret mode), plus hypothesis property checks."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.gemv_engine import (
     gemv_bit_serial_reference,

@@ -35,11 +35,11 @@ def test_pipeline_matches_sequential_multi_device():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp
+        from repro.dist import make_mesh, use_mesh
         from repro.dist.pipeline import pipeline_apply, microbatch, stack_stages
         from jax.sharding import NamedSharding, PartitionSpec as P
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         L, D, B, M, S = 8, 16, 8, 4, 2
         key = jax.random.PRNGKey(0)
         Ws = jax.random.normal(key, (L, D, D)) * 0.3
@@ -52,7 +52,7 @@ def test_pipeline_matches_sequential_multi_device():
         ref = stage_fn(Ws, x)
         micros = microbatch(x, M)
         staged = stack_stages(Ws, S)
-        with jax.sharding.set_mesh(mesh):
+        with use_mesh(mesh):
             staged_s = jax.device_put(staged, NamedSharding(mesh, P("pod")))
             out = jax.jit(lambda w, m: pipeline_apply(
                 w, m, stage_fn, n_stages=S))(staged_s, micros)
