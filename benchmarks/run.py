@@ -16,6 +16,7 @@ def main() -> None:
         fig6_latency,
         kernel_bench,
         roofline_summary,
+        serve_bench,
         table1_fmax,
         table3_tile,
         table5_freq,
@@ -30,6 +31,7 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "engine": engine_model.run,
         "roofline": roofline_summary.run,
+        "serve": serve_bench.run,
     }
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

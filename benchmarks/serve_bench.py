@@ -1,0 +1,182 @@
+#!/usr/bin/env python
+"""Serving benchmark: paged continuous batching vs the fixed-slot engine.
+
+For each batch size (= decode lanes), a stream of prompts is served through
+
+  * ``slots`` — the legacy fixed-slot engine (per-token prompt prefill,
+    fixed ``n_slots × max_len`` cache rectangle);
+  * ``paged`` — the paged-KV engine (batched chunked prefill through
+    ``prefill_chunk``, block-table decode, capacity-based admission);
+  * ``paged_kv8`` — paged with ``EngineConfig.kv_bits=8`` int8 KV pages.
+
+and the run reports generated tokens/sec, time-to-first-token, and the KV
+memory each mode holds.  Results land in ``BENCH_serve.json`` (the serving
+entry of the bench trajectory) plus the repo-standard CSV rows on stdout.
+
+  PYTHONPATH=src python benchmarks/serve_bench.py            # full sweep
+  PYTHONPATH=src python benchmarks/serve_bench.py --smoke    # CI: batch 4
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def _build(arch: str):
+    import jax
+
+    from repro.config import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _tree_bytes(t):
+    import jax
+
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(t)
+               if hasattr(l, "dtype"))
+
+
+def _workload(cfg, batch: int, n_reqs: int, prompt_len: int,
+              max_new: int):
+    prompts = [
+        [(7 * i + j) % cfg.vocab_size for j in range(prompt_len + i % 4)]
+        for i in range(n_reqs)
+    ]
+    return prompts, max_new
+
+
+def _serve(cfg, params, mode: str, batch: int, prompts, max_new: int,
+           max_len: int, kv_bits: int = 0, page_size: int = 8,
+           prefill_chunk: int = 16, n_pages: int = 0):
+    from repro.config.base import EngineConfig, ServeConfig
+    from repro.serve import ServeEngine
+
+    scfg = ServeConfig(
+        max_new_tokens=max_new,
+        engine=EngineConfig(kv_bits=kv_bits, backend="reference"),
+        page_size=page_size, prefill_chunk=prefill_chunk, n_pages=n_pages)
+    eng = ServeEngine(cfg, params, scfg, n_slots=batch, max_len=max_len,
+                      mode=mode)
+    # warm the jits (fresh closures per engine would otherwise bill
+    # compilation to the first mode measured)
+    eng.submit(prompts[0][:4], max_new_tokens=2)
+    eng.run()
+
+    for p in prompts:
+        eng.submit(p)
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+
+    gen = sum(len(r.output) for r in done)
+    pre = sum(len(r.prompt) for r in done)
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    kv_bytes = (eng.pages.nbytes() if mode == "paged"
+                else _tree_bytes(eng.cache))
+    outputs = {r.rid: r.output for r in done}
+    return {
+        "mode": mode + (f"_kv{kv_bits}" if kv_bits else ""),
+        "batch": batch,
+        "kv_bits": kv_bits,
+        "requests": len(done),
+        "prompt_tokens": pre,
+        "gen_tokens": gen,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(gen / wall, 2) if wall > 0 else 0.0,
+        "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4) if ttfts else None,
+        "kv_bytes": int(kv_bytes),
+        "preemptions": eng.preemptions,
+    }, outputs
+
+
+def run(batches=(1, 2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
+        prompt_len: int = 8, max_new: int = 8, max_len: int = 64,
+        with_kv8: bool = True, out: str = "BENCH_serve.json"):
+    """Bench entry point (also registered in benchmarks.run).  Returns the
+    repo-standard (name, us_per_call, derived) CSV rows."""
+    cfg, params = _build(arch)
+    results, rows = [], []
+    identical = True
+    for batch in batches:
+        prompts, _ = _workload(cfg, batch, n_reqs_per_lane * batch,
+                               prompt_len, max_new)
+        slot_res, slot_out = _serve(cfg, params, "slots", batch, prompts,
+                                    max_new, max_len)
+        paged_res, paged_out = _serve(cfg, params, "paged", batch, prompts,
+                                      max_new, max_len)
+        identical &= slot_out == paged_out
+        pair = [slot_res, paged_res]
+        if with_kv8:
+            kv8_res, _ = _serve(cfg, params, "paged", batch, prompts,
+                                max_new, max_len, kv_bits=8)
+            pair.append(kv8_res)
+        results.extend(pair)
+        for r in pair:
+            us = 1e6 * r["wall_s"] / max(r["gen_tokens"], 1)
+            rows.append((f"serve_{r['mode']}_b{batch}", round(us, 1),
+                         f"tok/s={r['tok_per_s']}"))
+
+    speedup = {
+        str(b): round(
+            next(r["tok_per_s"] for r in results
+                 if r["batch"] == b and r["mode"] == "paged")
+            / max(next(r["tok_per_s"] for r in results
+                       if r["batch"] == b and r["mode"] == "slots"), 1e-9),
+            3)
+        for b in batches
+    }
+    record = {
+        "bench": "serve",
+        "arch": arch,
+        "reduced": True,
+        "dtype": "float32",
+        "workload": {"n_reqs_per_lane": n_reqs_per_lane,
+                     "prompt_len": prompt_len, "max_new": max_new,
+                     "max_len": max_len, "batches": list(batches)},
+        "results": results,
+        "paged_over_slots_tok_per_s": speedup,
+        "token_identical": bool(identical),
+        "paged_ge_slots_at_batch4plus": all(
+            v >= 1.0 for b, v in speedup.items() if int(b) >= 4),
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: batch 4 only, short generations")
+    ap.add_argument("--batches", type=int, nargs="*", default=None)
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = run(batches=tuple(args.batches or (4,)), max_new=6,
+                   n_reqs_per_lane=2, out=args.out)
+    else:
+        rows = run(batches=tuple(args.batches or (1, 2, 4)), out=args.out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(",".join(str(v) for v in row))
+
+    with open(args.out) as f:
+        record = json.load(f)
+    if not record["token_identical"]:
+        raise SystemExit("paged outputs diverged from fixed-slot outputs")
+    if args.smoke and not record["paged_ge_slots_at_batch4plus"]:
+        raise SystemExit("paged throughput fell below fixed-slot at b>=4")
+    print(f"# paged/slots tok/s: {record['paged_over_slots_tok_per_s']}  "
+          f"token_identical={record['token_identical']}")
+
+
+if __name__ == "__main__":
+    main()

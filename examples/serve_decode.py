@@ -1,9 +1,11 @@
 #!/usr/bin/env python
 """End-to-end serving driver (the paper's kind of workload: GEMV-bound
 decode).  Trains a small LM briefly so weights are meaningful, then serves
-a stream of batched requests through the continuous-batching engine —
-once with dense bf16 weights and once with the IMAGine int8 bit-plane
-engine — and reports the weight-bytes reduction the engine buys.
+a stream of batched requests — through the legacy fixed-slot engine, the
+paged-KV continuous-batching engine (batched chunked prefill + block-table
+decode), and the fully-quantized IMAGine mode (int8 bit-plane weights +
+int8 KV pages) — and reports the weight- and KV-byte reductions plus the
+greedy-token agreement across modes.
 
     PYTHONPATH=src python examples/serve_decode.py [--tokens 24] [--reqs 6]
 """
@@ -50,35 +52,44 @@ def main():
                for i in range(args.reqs)]
 
     results = {}
-    for label, engine in (
-        ("dense-bf16", EngineConfig()),
-        ("imagine-int8", EngineConfig(weight_bits=8, backend="reference")),
-        ("imagine-int4", EngineConfig(weight_bits=4, backend="reference")),
+    for label, mode, engine in (
+        ("slots-dense", "slots", EngineConfig()),
+        ("paged-dense", "paged", EngineConfig()),
+        ("paged-kv8", "paged",
+         EngineConfig(kv_bits=8, backend="reference")),
+        ("paged-imagine-int8", "paged",
+         EngineConfig(weight_bits=8, kv_bits=8, backend="reference")),
     ):
         eng = ServeEngine(
             cfg, params,
-            ServeConfig(max_new_tokens=args.tokens, engine=engine),
-            n_slots=4, max_len=64)
+            ServeConfig(max_new_tokens=args.tokens, engine=engine,
+                        page_size=8, prefill_chunk=8),
+            n_slots=4, max_len=64, mode=mode)
         t0 = time.perf_counter()
         for p in prompts:
             eng.submit(p)
         done = eng.run()
         dt = time.perf_counter() - t0
         wbytes = tree_bytes(eng.params)
+        kvbytes = (eng.pages.nbytes() if mode == "paged"
+                   else tree_bytes(eng.cache))
         results[label] = done
+        extra = (f", preemptions={eng.preemptions}" if mode == "paged"
+                 else "")
         print(f"== {label}: {len(done)} requests, {dt:.1f}s, "
-              f"weight bytes={wbytes/1e6:.1f}MB ==")
+              f"weights={wbytes/1e6:.1f}MB, kv={kvbytes/1e6:.2f}MB{extra} ==")
         for r in sorted(done, key=lambda r: r.rid)[:3]:
             print(f"  req{r.rid}: prompt={r.prompt} -> {r.output}")
 
-    base = {r.rid: r.output for r in results["dense-bf16"]}
-    for label in ("imagine-int8", "imagine-int4"):
+    base = {r.rid: r.output for r in results["slots-dense"]}
+    for label in ("paged-dense", "paged-kv8", "paged-imagine-int8"):
         agree = sum(
             t1 == t2
             for r in results[label]
             for t1, t2 in zip(base[r.rid], r.output))
         total = sum(len(r.output) for r in results[label])
-        print(f"{label}: greedy agreement with dense = {agree}/{total}")
+        print(f"{label}: greedy agreement with slots-dense = "
+              f"{agree}/{total}")
 
 
 if __name__ == "__main__":

@@ -317,10 +317,33 @@ class TrainConfig:
 
 @dataclass(frozen=True)
 class ServeConfig:
+    """Serving knobs (see ``docs/serving.md``).
+
+    ``mode``: ``"auto"`` (paged-KV for attention families, fixed slots for
+    ssm/hybrid), ``"paged"``, or ``"slots"``.
+    ``page_size``: tokens per KV page.
+    ``n_pages``: physical pages in the shared pool; 0 sizes the pool to
+    the full ``n_slots × max_len`` rectangle (no preemption).
+    ``prefill_chunk``: prompt tokens per batched chunked-prefill step.
+    """
+
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 = greedy
     top_k: int = 0
     engine: EngineConfig = field(default_factory=EngineConfig)
+    mode: str = "auto"                # auto | paged | slots
+    page_size: int = 16
+    n_pages: int = 0                  # 0 = full capacity (never preempts)
+    prefill_chunk: int = 32
+
+    def __post_init__(self):
+        if self.mode not in ("auto", "paged", "slots"):
+            raise ValueError(f"mode must be auto/paged/slots, got {self.mode}")
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
 
 
 @dataclass(frozen=True)

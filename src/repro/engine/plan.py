@@ -32,6 +32,9 @@ class EnginePlan:
     ``backend``: concrete registry name (never ``"auto"``).
     ``bits``: configured weight precision — used when *packing* weights;
         at apply time the weight container's own ``bits`` is authoritative.
+        0 means "weights stay dense" and is only valid on a plan that
+        quantizes something else (``kv_bits > 0``) — plan resolution
+        returns None when nothing at all is quantized.
     ``radix``: weight bits retired per bit-serial pass (1 = IMAGine radix-2
         baseline, 2 = slice4/Booth-radix-4, 4 = nibble pass).
     ``kv_bits``: beyond-paper bit-planed KV cache (0 = off, 8 = int8).
@@ -49,7 +52,10 @@ class EnginePlan:
     block_k: int = 512
 
     def __post_init__(self):
-        validate_bits(self.bits)
+        if self.kv_bits not in (0, 8):
+            raise ValueError(f"kv_bits must be 0/8, got {self.kv_bits}")
+        if self.bits or not self.kv_bits:
+            validate_bits(self.bits)  # bits=0 only on a kv-only plan
         if self.radix not in (1, 2, 4, 8):
             raise ValueError(f"radix must be 1/2/4/8, got {self.radix}")
         if self.bits % self.radix != 0:
@@ -97,7 +103,10 @@ class EnginePlan:
 
 @functools.lru_cache(maxsize=None)
 def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
-    if not cfg.enabled:
+    # kv_bits alone enables the engine: the resulting plan carries bits=0
+    # (dense weights) but routes the KV cache through int8 pages — the
+    # quantized cache runs the same dispatch layer as the weights.
+    if not cfg.enabled and not getattr(cfg, "kv_bits", 0):
         return None
     name = backend or getattr(cfg, "backend", "auto") or "auto"
     if name == "auto" and not getattr(cfg, "use_pallas", True):
@@ -116,9 +125,12 @@ def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
 def resolve_plan(cfg, *, backend: Optional[str] = None) -> Optional[EnginePlan]:
     """``EngineConfig`` (or None) -> resolved ``EnginePlan`` (or None).
 
-    None / a disabled config (``weight_bits == 0``) resolve to None — the
-    plain dense path.  ``backend`` overrides the config's backend field.
-    Passing an already-resolved plan returns it unchanged.
+    None / a fully-disabled config (``weight_bits == 0`` *and*
+    ``kv_bits == 0``) resolve to None — the plain dense path.  A
+    kv-only config (``weight_bits=0, kv_bits=8``) resolves to a live
+    plan with ``bits=0`` (dense weights, int8 KV pages).  ``backend``
+    overrides the config's backend field.  Passing an already-resolved
+    plan returns it unchanged.
     """
     if cfg is None:
         return None

@@ -31,7 +31,8 @@ import jax           # noqa: E402
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              engine_bits: int = 0, engine_radix: int = 1, kv_bits: int = 0,
              engine_backend: str = "reference",
-             split_local: bool = False, remat: str = "block",
+             split_local: bool = False, paged: bool = False,
+             remat: str = "block",
              microbatches: int = 1, grad_compress_bits: int = 0,
              out_dir: str = "experiments/dryrun", tag: str = "") -> dict:
     import numpy as np
@@ -67,7 +68,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
-    kw = {"split_local": split_local} if shape.kind == "decode" else {}
+    kw = ({"split_local": split_local, "paged": paged}
+          if shape.kind == "decode" else {})
 
     from repro.dist import use_mesh
 
@@ -93,10 +95,13 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     cache_bytes = 0.0
     if kind in ("decode", "prefill"):
         cache_abs = args[2] if kind == "prefill" else args[1]
+        if isinstance(cache_abs, dict):
+            leaves = [l for k, sub in cache_abs.items() if k != "pos"
+                      for l in jax.tree.leaves(sub)]
+        else:  # paged: a KVPages pytree (k/v [+ scale] pools)
+            leaves = jax.tree.leaves(cache_abs)
         cache_bytes = float(sum(
-            np.prod(l.shape) * l.dtype.itemsize
-            for k, sub in cache_abs.items() if k != "pos"
-            for l in jax.tree.leaves(sub)))
+            np.prod(l.shape) * l.dtype.itemsize for l in leaves))
     report = roofline_report(
         compiled, n_dev,
         model_flops=model_flops_for_cell(cfg, shape),
@@ -111,8 +116,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "kind": kind,
         "engine_bits": engine_bits,
         "engine_radix": engine_radix,
-        "engine_backend": engine_backend if engine_bits else "",
+        "kv_bits": kv_bits,
+        "engine_backend": engine_backend if (engine_bits or kv_bits) else "",
         "split_local": split_local,
+        "paged": paged,
         "remat": remat,
         "microbatches": microbatches,
         "grad_compress_bits": grad_compress_bits,
@@ -128,8 +135,12 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     name = f"{arch}__{shape_name}__{suffix}"
     if engine_bits:
         name += f"__eng{engine_bits}r{engine_radix}"
+    if kv_bits:
+        name += f"__kv{kv_bits}"
     if split_local:
         name += "__splitlocal"
+    if paged:
+        name += "__paged"
     if tag:
         name += f"__{tag}"
     path = os.path.join(out_dir, name + ".json")
@@ -152,9 +163,13 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--engine-bits", type=int, default=0)
     ap.add_argument("--engine-radix", type=int, default=1)
+    ap.add_argument("--kv-bits", type=int, default=0,
+                    help="int8 bit-planed KV cache/pages (0 = off)")
     ap.add_argument("--engine-backend", default="reference",
                     help="engine backend registry name (see repro.engine)")
     ap.add_argument("--split-local", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="lower the paged-KV block-table decode cell")
     ap.add_argument("--remat", default="block")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress-bits", type=int, default=0)
@@ -163,8 +178,9 @@ def main():
     args = ap.parse_args()
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              engine_bits=args.engine_bits, engine_radix=args.engine_radix,
-             engine_backend=args.engine_backend,
-             split_local=args.split_local, remat=args.remat,
+             kv_bits=args.kv_bits, engine_backend=args.engine_backend,
+             split_local=args.split_local, paged=args.paged,
+             remat=args.remat,
              microbatches=args.microbatches,
              grad_compress_bits=args.grad_compress_bits,
              out_dir=args.out, tag=args.tag)

@@ -26,8 +26,9 @@ from repro.dist.sharding import (
     param_shardings,
 )
 from repro.engine import resolve_plan
-from repro.models import decode_step, init_cache, init_params
+from repro.models import decode_step, decode_step_paged, init_cache, init_params
 from repro.models.transformer import prefill, quantize_params
+from repro.serve.pages import init_kv_pages, pages_for
 from repro.optim import make_optimizer
 from repro.train.trainer import make_train_step
 
@@ -107,10 +108,47 @@ def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     return fn, (ap_sh, abatch_sh, acache_sh)
 
 
+def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
+    """Decode against the paged-KV page pool (the continuous-batching
+    serving layout): block-table gather instead of a per-slot cache
+    rectangle, sized here at full capacity for the cell's batch."""
+    cfg, shape = run.model, run.shape
+    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    bits = plan.bits if plan else 0
+    ap_sh = sharded_abstract_params(cfg, mesh, bits)
+
+    kv_bits = plan.kv_bits if plan else 0
+    b = shape.global_batch
+    page_size = run.serve.page_size
+    n_blocks = pages_for(shape.seq_len, page_size)
+    n_pages = run.serve.n_pages or b * n_blocks + 1
+    apages = jax.eval_shape(functools.partial(
+        init_kv_pages, cfg, n_pages, page_size, kv_bits=kv_bits))
+    apages_sh = _attach(apages, cache_shardings(mesh, apages))
+
+    abt = jax.ShapeDtypeStruct((b, n_blocks), jnp.int32)
+    apos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    aact = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    tok_shape = ((b, 1, cfg.n_codebooks) if cfg.family == "audio"
+                 else (b, 1))
+    atoks = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
+    atoks_sh = _attach(atoks, batch_shardings(mesh, atoks))["tokens"]
+
+    fn = jax.jit(
+        lambda params, pages, bt, pos, active, tokens: decode_step_paged(
+            params, pages, bt, pos, active, tokens, cfg, plan),
+        donate_argnums=(1,),
+    )
+    return fn, (ap_sh, apages_sh, abt, apos, aact, atoks_sh)
+
+
 def serve_cell(run: RunConfig, mesh, split_local: bool = False,
-               stacked: bool = False) -> Tuple[Any, Tuple]:
+               stacked: bool = False, paged: bool = False) -> Tuple[Any, Tuple]:
     """Decode cells default to the unstacked per-layer cache layout (no
-    stacked scan carry — the production decode graph)."""
+    stacked scan carry — the production decode graph).  ``paged=True``
+    lowers the paged-KV block-table layout instead."""
+    if paged:
+        return paged_serve_cell(run, mesh)
     cfg, shape = run.model, run.shape
     plan = resolve_plan(run.serve.engine)  # resolved once per cell
     bits = plan.bits if plan else 0

@@ -8,18 +8,24 @@ so HLO size is O(1) in depth.
 
 from repro.models.transformer import (
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_params,
     loss_fn,
+    prefill,
+    prefill_chunk,
     quantize_params,
 )
 
 __all__ = [
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_cache",
     "init_params",
     "loss_fn",
+    "prefill",
+    "prefill_chunk",
     "quantize_params",
 ]

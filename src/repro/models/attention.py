@@ -1,7 +1,7 @@
 """Attention paths: dense masked, chunked-flash (online softmax, scan over
 KV blocks — O(S·block) memory, required for the 32k prefill cells), decode
-with KV cache, and a gathered sliding-window path (the hillclimb-C
-optimization for mostly-local stacks like gemma3).
+with KV cache (bf16/f32 or int8 bit-planed), and decode/prefill reads
+through a paged-KV block table (the continuous-batching serving layout).
 
 All paths share GQA semantics: Hq query heads grouped over Hkv KV heads.
 """
@@ -251,3 +251,86 @@ def attend_decode(
     out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+@_scoped("attend_decode_quant")
+def attend_decode_quant(
+    q: jnp.ndarray,            # (B, 1, Hq, D)
+    k_cache: jnp.ndarray,      # (B, T, Hkv, D) int8
+    v_cache: jnp.ndarray,
+    k_scale: jnp.ndarray,      # (B, T, Hkv)
+    v_scale: jnp.ndarray,
+    cur_pos: jnp.ndarray,      # (B,)
+    window: int = 0,
+) -> jnp.ndarray:
+    """Decode attention over an int8 cache: scores_t = (q·k_t)·s_k[t];
+    output = Σ_t (p_t·s_v[t])·v_t — scales fold into the probabilities so
+    the contraction stays int8 (1 byte/element of cache traffic)."""
+    b, t, n_kv, dh = k_cache.shape
+    hq = q.shape[2]
+    g = hq // n_kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, n_kv, g, dh).astype(jnp.bfloat16)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                    k_cache.astype(jnp.bfloat16),
+                    preferred_element_type=jnp.float32) * scale
+    sc = sc * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    kv_pos = jnp.arange(t)[None, :]
+    valid = kv_pos <= cur_pos[:, None]
+    near = kv_pos > cur_pos[:, None] - window
+    valid = jnp.logical_and(valid, jnp.where(window > 0, near, True))
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    pv = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bhgk,bkhd->bhgd", pv.astype(jnp.bfloat16),
+                     v_cache.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged-KV reads: K/V live in a shared (P, page, Hkv, D) page pool and are
+# addressed per request through a (B, n_blocks) block table.
+# ---------------------------------------------------------------------------
+
+
+def gather_kv_pages(pages: jnp.ndarray,
+                    block_tables: jnp.ndarray) -> jnp.ndarray:
+    """Materialize each lane's logical KV view from the page pool.
+
+    ``pages``: ``(P, page, ...)`` physical pool (one layer of K, V or a
+    scale pool); ``block_tables``: ``(B, n_blocks)`` int32 physical page
+    ids in logical order.  Returns ``(B, n_blocks * page, ...)`` — logical
+    position ``t`` of lane ``b`` lives at
+    ``pages[block_tables[b, t // page], t % page]``.
+    """
+    g = jnp.take(pages, block_tables, axis=0)      # (B, nblk, page, ...)
+    b, nblk, page = g.shape[:3]
+    return g.reshape((b, nblk * page) + g.shape[3:])
+
+
+@_scoped("attend_paged_decode")
+def attend_paged_decode(
+    q: jnp.ndarray,            # (B, 1, Hq, D)
+    k_pages: jnp.ndarray,      # (P, page, Hkv, D) — one layer's pool
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    cur_pos: jnp.ndarray,      # (B,) position of the newest token
+    window: int = 0,
+    k_scale: Optional[jnp.ndarray] = None,  # (P, page, Hkv) int8 pools only
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Single-token decode reading K/V through the block table.
+
+    The gathered view is exactly the dense cache the fixed-slot engine
+    holds (unwritten logical positions are masked by ``cur_pos``), so this
+    path is token-identical to :func:`attend_decode` — pages only change
+    *where* the bytes live, not the math.
+    """
+    kg = gather_kv_pages(k_pages, block_tables)
+    vg = gather_kv_pages(v_pages, block_tables)
+    if k_scale is not None:
+        ksg = gather_kv_pages(k_scale, block_tables)
+        vsg = gather_kv_pages(v_scale, block_tables)
+        return attend_decode_quant(q, kg, vg, ksg, vsg, cur_pos, window)
+    return attend_decode(q, kg, vg, cur_pos, window)

@@ -25,9 +25,12 @@ from repro.engine import as_plan, pack_linear
 from repro.models.attention import (
     FLASH_THRESHOLD,
     attend_decode,
+    attend_decode_quant,
     attend_dense,
     attend_flash,
     attend_local_gather,
+    attend_paged_decode,
+    gather_kv_pages,
 )
 from repro.models.layers import (
     apply_rope,
@@ -567,16 +570,8 @@ def _attn_decode_apply(p, x, cache_k, cache_v, pos, cfg, eng, window,
     if scales is not None:
         # int8 cache: symmetric per-(token, head) quantization at write
         k_sc, v_sc = scales
-
-        def quant(val):  # (B, Hkv, Dh) -> int8, scale (B, Hkv)
-            absmax = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1)
-            scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
-            qv = jnp.clip(jnp.round(val.astype(jnp.float32)
-                                    / scale[..., None]), -127, 127)
-            return qv.astype(jnp.int8), scale
-
-        kq, ks_new = quant(k[:, 0])
-        vq, vs_new = quant(v[:, 0])
+        kq, ks_new = _quantize_kv(k[:, 0])
+        vq, vs_new = _quantize_kv(v[:, 0])
         new_k = cache_k.at[bidx, slot].set(kq)
         new_v = cache_v.at[bidx, slot].set(vq)
         k_sc = k_sc.at[bidx, slot].set(ks_new.astype(k_sc.dtype))
@@ -592,32 +587,22 @@ def _attn_decode_apply(p, x, cache_k, cache_v, pos, cfg, eng, window,
     return x + o, new_k, new_v
 
 
-def _attend_decode_quant(q, k_cache, v_cache, k_scale, v_scale, cur_pos,
-                         window):
-    """Decode attention over an int8 cache: scores_t = (q·k_t)·s_k[t];
-    output = Σ_t (p_t·s_v[t])·v_t — scales fold into the probabilities so
-    the contraction stays int8 (1 byte/element of cache traffic)."""
-    with jax.named_scope("attend_decode"):
-        b, t, n_kv, dh = k_cache.shape
-        hq = q.shape[2]
-        g = hq // n_kv
-        scale = dh ** -0.5
-        qg = q.reshape(b, n_kv, g, dh).astype(jnp.bfloat16)
-        sc = jnp.einsum("bhgd,bkhd->bhgk", qg,
-                        k_cache.astype(jnp.bfloat16),
-                        preferred_element_type=jnp.float32) * scale
-        sc = sc * k_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-        kv_pos = jnp.arange(t)[None, :]
-        valid = kv_pos <= cur_pos[:, None]
-        near = kv_pos > cur_pos[:, None] - window
-        valid = jnp.logical_and(valid, jnp.where(window > 0, near, True))
-        sc = jnp.where(valid[:, None, None, :], sc, -1e30)
-        p = jax.nn.softmax(sc, axis=-1)
-        pv = p * v_scale.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
-        out = jnp.einsum("bhgk,bkhd->bhgd", pv.astype(jnp.bfloat16),
-                         v_cache.astype(jnp.bfloat16),
-                         preferred_element_type=jnp.float32)
-        return out.reshape(b, 1, hq, dh).astype(q.dtype)
+def _quantize_kv(val):
+    """Symmetric per-(…, head) int8 quantization of a K/V write.
+
+    ``val``: ``(..., Hkv, Dh)`` float -> (int8 of the same shape,
+    ``(..., Hkv)`` float scales).
+    """
+    absmax = jnp.max(jnp.abs(val.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    qv = jnp.clip(jnp.round(val.astype(jnp.float32)
+                            / scale[..., None]), -127, 127)
+    return qv.astype(jnp.int8), scale
+
+
+# moved to repro.models.attention (shared with the paged read path); the
+# underscore name is kept as an alias for existing importers.
+_attend_decode_quant = attend_decode_quant
 
 
 def _attn_decode_apply_ring(p, x, cache_k, cache_v, pos, cfg, eng, window):
@@ -835,6 +820,206 @@ def _decode_split_local(params, cache, new_cache, x, pos, cfg, eng):
         new_cache["k_local"] = jnp.stack(nk_l)
         new_cache["v_local"] = jnp.stack(nv_l)
     return x
+
+
+# ---------------------------------------------------------------------------
+# paged-KV serving: decode + chunked prefill against a page-table cache
+# ---------------------------------------------------------------------------
+
+
+def _scatter_targets(block_tables, positions, valid, page_size):
+    """Physical (page, offset) scatter targets for logical ``positions``.
+
+    ``positions`` may be (B,) (decode) or (B, C) (a prefill chunk); invalid
+    writes (idle lanes, chunk padding) are routed to the null page 0, which
+    no block table references.
+    """
+    nblk = block_tables.shape[1]
+    blk = jnp.clip(positions // page_size, 0, nblk - 1)
+    if positions.ndim == 1:                       # decode: (B,)
+        rows = jnp.arange(block_tables.shape[0])
+    else:                                         # prefill chunk: (B, C)
+        rows = jnp.arange(block_tables.shape[0])[:, None]
+    pidx = jnp.where(valid, block_tables[rows, blk], 0)
+    poff = positions % page_size
+    return pidx, poff
+
+
+def decode_step_paged(
+    params: Params,
+    pages,                               # KVPages: k/v (L, P, page, Hkv, Dh)
+    block_tables: jnp.ndarray,           # (B, n_blocks) int32
+    pos: jnp.ndarray,                    # (B,) logical token count per lane
+    active: jnp.ndarray,                 # (B,) bool — lanes decoding now
+    tokens: jnp.ndarray,                 # (B, 1) or (B, 1, K) for audio
+    cfg: ModelConfig,
+    eng: Optional[EngineConfig] = None,
+) -> Tuple[jnp.ndarray, Any]:
+    """One token of autoregressive decode over paged KV.
+
+    Token-identical to :func:`decode_step` on the fixed-slot cache: the
+    block table only relocates KV bytes into shared pages.  Inactive lanes
+    (idle, or mid-prefill — their pages must stay frozen) scatter their
+    garbage K/V into the null page and their logits are ignored by the
+    caller.  Returns ``(logits, new_pages)``.
+    """
+    eng = as_plan(eng)
+    b = tokens.shape[0]
+    dh, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    if cfg.family == "audio":
+        x = sum(
+            jnp.take(params["embed"][k], tokens[..., k], axis=0)
+            for k in range(cfg.n_codebooks)
+        )
+    else:
+        x = jnp.take(params["embed"], tokens, axis=0)
+    quant = pages.k_scale is not None
+    pidx, poff = _scatter_targets(block_tables, pos, active,
+                                  pages.page_size)
+    windows = _layer_windows(cfg)
+    pos2 = pos[:, None]
+
+    def body(x, xs):
+        lp, win = xs["lp"], xs["win"]
+        kp, vp = xs["kp"], xs["vp"]
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = dense(lp["attn"]["wq"], h, eng).reshape(b, 1, hq, dh)
+        k = dense(lp["attn"]["wk"], h, eng).reshape(b, 1, hkv, dh)
+        v = dense(lp["attn"]["wv"], h, eng).reshape(b, 1, hkv, dh)
+        q = apply_rope(q, pos2, cfg.rope_theta)
+        k = apply_rope(k, pos2, cfg.rope_theta)
+        ys = {}
+        if quant:
+            kq, ks_new = _quantize_kv(k[:, 0])
+            vq, vs_new = _quantize_kv(v[:, 0])
+            nkp = kp.at[pidx, poff].set(kq)
+            nvp = vp.at[pidx, poff].set(vq)
+            nks = xs["ks"].at[pidx, poff].set(
+                ks_new.astype(xs["ks"].dtype))
+            nvs = xs["vs"].at[pidx, poff].set(
+                vs_new.astype(xs["vs"].dtype))
+            o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win,
+                                    k_scale=nks, v_scale=nvs)
+            ys["ks"], ys["vs"] = nks, nvs
+        else:
+            nkp = kp.at[pidx, poff].set(k[:, 0].astype(kp.dtype))
+            nvp = vp.at[pidx, poff].set(v[:, 0].astype(vp.dtype))
+            o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win)
+        o = dense(lp["attn"]["wo"], o.reshape(b, 1, hq * dh), eng)
+        x = x + o
+        if cfg.family == "moe":
+            x, _ = _moe_apply(lp, x, cfg, eng)
+        else:
+            x = _mlp_apply(lp, x, cfg, eng)
+        ys["kp"], ys["vp"] = nkp, nvp
+        return x, ys
+
+    xs = {"lp": params["layers"], "win": windows,
+          "kp": pages.k, "vp": pages.v}
+    if quant:
+        xs["ks"], xs["vs"] = pages.k_scale, pages.v_scale
+    x, ys = jax.lax.scan(body, x, xs)
+    new_pages = pages.replace(
+        k=ys["kp"], v=ys["vp"],
+        k_scale=ys.get("ks"), v_scale=ys.get("vs"))
+    logits = _lm_logits(params, x, cfg, eng)
+    return logits, new_pages
+
+
+def prefill_chunk(
+    params: Params,
+    pages,                               # KVPages
+    block_tables: jnp.ndarray,           # (B, n_blocks) int32
+    tokens: jnp.ndarray,                 # (B, C) or (B, C, K) for audio
+    pos0: jnp.ndarray,                   # (B,) tokens already prefilled
+    seq_lens: jnp.ndarray,               # (B,) total valid after this chunk
+    cfg: ModelConfig,
+    eng: Optional[EngineConfig] = None,
+) -> Tuple[jnp.ndarray, Any]:
+    """One batched chunk of prompt prefill against paged KV.
+
+    Lane ``b`` contributes tokens for logical positions
+    ``[pos0[b], seq_lens[b])``; trailing chunk padding (and idle lanes,
+    ``seq_lens == pos0``) is masked — padded K/V lands in the null page
+    and padded queries attend nothing real.  Attention sees the lane's
+    *full* gathered prefix (pages written by earlier chunks) plus this
+    chunk, so running ``prefill_chunk`` to completion over any chunk size
+    matches the one-shot :func:`prefill` numerics.  Returns
+    ``(last-valid-token logits (B, 1, V...), new_pages)``.
+    """
+    eng = as_plan(eng)
+    c = tokens.shape[1]
+    dh, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    positions = pos0[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    valid_q = positions < seq_lens[:, None]
+    x, positions = embed_inputs(
+        params, {"tokens": tokens, "positions": positions}, cfg)
+    x = shard_batch_seq(x)
+    b = x.shape[0]
+    quant = pages.k_scale is not None
+    pidx, poff = _scatter_targets(block_tables, positions, valid_q,
+                                  pages.page_size)
+    t_total = block_tables.shape[1] * pages.page_size
+    kv_pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None, :],
+                              (b, t_total))
+    limit = jnp.minimum(seq_lens, pos0 + c)
+    kv_valid = kv_pos < limit[:, None]
+    windows = _layer_windows(cfg)
+
+    def body(x, xs):
+        lp, win = xs["lp"], xs["win"]
+        kp, vp = xs["kp"], xs["vp"]
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = dense(lp["attn"]["wq"], h, eng).reshape(b, c, hq, dh)
+        k = dense(lp["attn"]["wk"], h, eng).reshape(b, c, hkv, dh)
+        v = dense(lp["attn"]["wv"], h, eng).reshape(b, c, hkv, dh)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+        ys = {}
+        if quant:
+            kq, ks_new = _quantize_kv(k)
+            vq, vs_new = _quantize_kv(v)
+            nkp = kp.at[pidx, poff].set(kq)
+            nvp = vp.at[pidx, poff].set(vq)
+            nks = xs["ks"].at[pidx, poff].set(
+                ks_new.astype(xs["ks"].dtype))
+            nvs = xs["vs"].at[pidx, poff].set(
+                vs_new.astype(xs["vs"].dtype))
+            kg = (gather_kv_pages(nkp, block_tables).astype(jnp.float32)
+                  * gather_kv_pages(nks, block_tables)
+                  .astype(jnp.float32)[..., None])
+            vg = (gather_kv_pages(nvp, block_tables).astype(jnp.float32)
+                  * gather_kv_pages(nvs, block_tables)
+                  .astype(jnp.float32)[..., None])
+            ys["ks"], ys["vs"] = nks, nvs
+        else:
+            nkp = kp.at[pidx, poff].set(k.astype(kp.dtype))
+            nvp = vp.at[pidx, poff].set(v.astype(vp.dtype))
+            kg = gather_kv_pages(nkp, block_tables)
+            vg = gather_kv_pages(nvp, block_tables)
+        o = attend_dense(q, kg, vg, positions, kv_pos, win,
+                         kv_valid=kv_valid)
+        o = dense(lp["attn"]["wo"], o.reshape(b, c, hq * dh), eng)
+        x = x + o
+        if cfg.family == "moe":
+            x, _ = _moe_apply(lp, x, cfg, eng)
+        else:
+            x = _mlp_apply(lp, x, cfg, eng)
+        ys["kp"], ys["vp"] = nkp, nvp
+        return x, ys
+
+    xs = {"lp": params["layers"], "win": windows,
+          "kp": pages.k, "vp": pages.v}
+    if quant:
+        xs["ks"], xs["vs"] = pages.k_scale, pages.v_scale
+    x, ys = jax.lax.scan(body, x, xs)
+    new_pages = pages.replace(
+        k=ys["kp"], v=ys["vp"],
+        k_scale=ys.get("ks"), v_scale=ys.get("vs"))
+    last = jnp.clip(seq_lens - pos0 - 1, 0, c - 1)
+    h_last = x[jnp.arange(b), last][:, None]
+    logits = _lm_logits(params, h_last, cfg, eng)
+    return logits, new_pages
 
 
 # ---------------------------------------------------------------------------

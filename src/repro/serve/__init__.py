@@ -1,4 +1,22 @@
-from repro.serve.engine import ServeEngine, Request
-from repro.serve.sampler import sample
+"""Serving: paged-KV continuous batching (pages + scheduler + engine).
 
-__all__ = ["ServeEngine", "Request", "sample"]
+``ServeEngine`` is the front door; ``KVPages`` / ``PageAllocator`` /
+``PagedScheduler`` are the paged-cache building blocks (see
+``docs/serving.md``).
+"""
+
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.pages import KVPages, PageAllocator, init_kv_pages, pages_for
+from repro.serve.sampler import sample
+from repro.serve.scheduler import PagedScheduler
+
+__all__ = [
+    "KVPages",
+    "PageAllocator",
+    "PagedScheduler",
+    "Request",
+    "ServeEngine",
+    "init_kv_pages",
+    "pages_for",
+    "sample",
+]

@@ -1,21 +1,33 @@
-"""Batched serving engine with slot-based continuous batching.
+"""Batched serving engine: paged-KV continuous batching (default) with the
+legacy fixed-slot engine kept as the comparison baseline.
 
-The engine holds weight-stationary (optionally IMAGine-quantized) params and
-a fixed pool of batch slots.  Requests are admitted into free slots, the
-decode loop advances *all* active slots with one fused ``decode_step`` per
-token (the GEMV-bound regime the paper targets), and finished requests free
-their slots for the admission queue — the standard continuous-batching
-serving shape, minus paged KV (cache slots are fixed-length).
+**Paged mode** (``mode="paged"``, the default for attention-KV families):
+KV state lives in a shared page pool (:mod:`repro.serve.pages`) addressed
+through per-request block tables; a scheduler
+(:mod:`repro.serve.scheduler`) admits requests by page capacity, prefills
+prompts in batched chunks through ``prefill_chunk`` (one forward per chunk
+across all pending lanes), and preempts the longest-running request when
+pages run out.  Decode throughput then scales with pool capacity — the
+serving analogue of the paper's GEMV-per-memory-capacity argument.
 
-With ``EngineConfig.weight_bits > 0`` every linear runs the bit-plane GEMV
-path: b/8 bytes of weight traffic per MAC, the paper's memory-capacity
-scaling argument applied to TPU HBM.
+**Fixed-slot mode** (``mode="slots"``; also the fallback for ssm/hybrid
+families, whose O(1) recurrent state has nothing to page): the original
+engine — a fixed ``(n_slots, max_len)`` cache rectangle, per-token prompt
+prefill, one fused ``decode_step`` per token across active slots.
+
+Both modes run every linear through the same resolved
+:class:`~repro.engine.EnginePlan`; with ``EngineConfig.kv_bits = 8`` the
+paged pools are int8 bit-planed exactly as ``weight_bits`` bit-planes the
+stationary weights — cache traffic drops to 1 byte/element through the
+same dispatch layer.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import functools
+import time
 from typing import Deque, Dict, List, Optional
 
 import jax
@@ -24,9 +36,21 @@ import numpy as np
 
 from repro.config.base import EngineConfig, ModelConfig, ServeConfig
 from repro.engine import resolve_plan
-from repro.models import decode_step, init_cache, quantize_params
-from repro.models.transformer import prefill
+from repro.models import (
+    decode_step,
+    decode_step_paged,
+    init_cache,
+    quantize_params,
+)
+from repro.models import prefill_chunk as _prefill_chunk_fn
+from repro.serve.pages import (
+    PAGED_FAMILIES,
+    PageAllocator,
+    init_kv_pages,
+    pages_for,
+)
 from repro.serve.sampler import sample
+from repro.serve.scheduler import PagedScheduler
 
 
 @dataclasses.dataclass
@@ -36,9 +60,40 @@ class Request:
     max_new_tokens: int
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # logits of the most recent token, fed to the next sampling step.  A
+    # real field now (it used to be injected by ``_prefill_slot``).
+    last_logits: Optional[np.ndarray] = dataclasses.field(
+        default=None, repr=False)
+    # --- paged-scheduler state --------------------------------------
+    prefill_tokens: List[int] = dataclasses.field(
+        default_factory=list, repr=False)
+    prefill_pos: int = 0
+    admit_seq: int = -1
+    preemptions: int = 0
+    # time-to-first-token relative to ``run()`` start (benchmarks)
+    ttft: Optional[float] = None
+
+    # deprecated alias (pre-paged code set this attribute dynamically)
+    @property
+    def _last_logits(self):
+        return self.last_logits
+
+    @_last_logits.setter
+    def _last_logits(self, value):
+        self.last_logits = value
 
 
 class ServeEngine:
+    """Continuous-batching serving over a paged or fixed-slot KV cache.
+
+    ``mode``: ``"paged"`` | ``"slots"`` | ``"auto"`` (paged for attention
+    families, slots for ssm/hybrid).  ``page_size`` / ``n_pages`` /
+    ``prefill_chunk`` configure the paged pool (``n_pages=0`` sizes the
+    pool to the full ``n_slots × max_len`` rectangle — no preemption;
+    smaller pools trade preemptions for memory, admission is always
+    capacity-checked).
+    """
+
     def __init__(
         self,
         cfg: ModelConfig,
@@ -48,6 +103,10 @@ class ServeEngine:
         n_slots: int = 4,
         max_len: int = 256,
         seed: int = 0,
+        mode: Optional[str] = None,
+        page_size: Optional[int] = None,
+        n_pages: Optional[int] = None,
+        prefill_chunk: Optional[int] = None,
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
@@ -56,61 +115,246 @@ class ServeEngine:
         # ever sees.
         self.plan = resolve_plan(self.scfg.engine)
         self.eng = self.plan  # back-compat alias
-        if self.plan is not None:
+        if self.plan is not None and self.plan.bits:
             params = quantize_params(params, cfg, self.plan.bits)
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
+        self.kv_bits = self.plan.kv_bits if self.plan is not None else 0
 
-        self.cache = init_cache(cfg, n_slots, max_len)
-        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        mode = mode or self.scfg.mode
+        if mode == "auto":
+            mode = "paged" if cfg.family in PAGED_FAMILIES else "slots"
+        if mode == "paged" and cfg.family not in PAGED_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} has no pageable KV cache; "
+                "use mode='slots'")
+        if mode not in ("paged", "slots"):
+            raise ValueError(f"unknown serve mode {mode!r}")
+        self.mode = mode
+
         self.queue: Deque[Request] = collections.deque()
         self._next_rid = 0
+        self._run_t0 = 0.0
 
         cfg_ = self.cfg
         plan_ = self.plan
 
-        @jax.jit
-        def _step(params, cache, tokens):
-            return decode_step(params, cache, tokens, cfg_, plan_)
+        if mode == "paged":
+            self.page_size = page_size or self.scfg.page_size
+            self.prefill_chunk = prefill_chunk or self.scfg.prefill_chunk
+            max_blocks = pages_for(max_len, self.page_size)
+            if n_pages is None:
+                n_pages = self.scfg.n_pages
+            if not n_pages:  # full rectangle + null page: never preempts
+                n_pages = n_slots * max_blocks + 1
+            self.pages = init_kv_pages(cfg, n_pages, self.page_size,
+                                       kv_bits=self.kv_bits)
+            self.alloc = PageAllocator(n_pages, self.page_size, n_slots,
+                                       max_len)
+            self.sched = PagedScheduler(self.alloc, self.prefill_chunk)
 
-        self._step = _step
+            # the page pool is donated: each step scatters into it and the
+            # old value is dropped, so XLA may update the buffers in place
+            # instead of copying the whole pool per token/chunk
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _dec(params, pages, bt, pos, active, tokens):
+                return decode_step_paged(params, pages, bt, pos, active,
+                                         tokens, cfg_, plan_)
+
+            @functools.partial(jax.jit, donate_argnums=(1,))
+            def _pf(params, pages, bt, tokens, pos0, seq_lens):
+                return _prefill_chunk_fn(params, pages, bt, tokens, pos0,
+                                         seq_lens, cfg_, plan_)
+
+            self._decode_paged = _dec
+            self._prefill_paged = _pf
+        else:
+            if self.kv_bits:
+                raise ValueError(
+                    "kv_bits is wired through the paged engine "
+                    "(int8 KV pages); mode='slots' serves the "
+                    "full-precision cache only")
+            self.cache = init_cache(cfg, n_slots, max_len)
+            self.slot_req: List[Optional[Request]] = [None] * n_slots
+
+            @jax.jit
+            def _step(params, cache, tokens):
+                return decode_step(params, cache, tokens, cfg_, plan_)
+
+            self._step = _step
 
     # ------------------------------------------------------------------ API
     def submit(self, prompt: List[int], max_new_tokens: Optional[int] = None
                ) -> Request:
-        req = Request(self._next_rid, list(prompt),
-                      max_new_tokens or self.scfg.max_new_tokens)
+        prompt = list(prompt)
+        if not prompt:
+            # an empty prompt leaves nothing to condition on (the old
+            # engine crashed with an unbound ``logits`` here): reject at
+            # the door — callers that want generation-from-nothing should
+            # submit an explicit BOS token.
+            raise ValueError(
+                "empty prompt: submit at least one token (e.g. BOS)")
+        if len(prompt) > self.max_len - 2:
+            raise ValueError(
+                f"prompt of {len(prompt)} tokens cannot fit max_len="
+                f"{self.max_len} with room to generate (limit is "
+                f"max_len - 2 = {self.max_len - 2})")
+        req = Request(self._next_rid, prompt,
+                      self.scfg.max_new_tokens if max_new_tokens is None
+                      else max_new_tokens)
+        req.prefill_tokens = list(prompt)
         self._next_rid += 1
-        self.queue.append(req)
+        if self.mode == "paged":
+            self.sched.submit(req)
+        else:
+            self.queue.append(req)
         return req
 
     def run(self) -> List[Request]:
         """Drive until queue + slots drain; returns completed requests."""
+        self._run_t0 = time.perf_counter()
+        if self.mode == "paged":
+            return self._run_paged()
+        return self._run_slots()
+
+    @property
+    def preemptions(self) -> int:
+        return self.sched.preemptions if self.mode == "paged" else 0
+
+    # ================================================== paged internals
+    def _run_paged(self) -> List[Request]:
+        finished: List[Request] = []
+        while self.sched.has_work():
+            self.sched.admit()
+            self._prefill_once()
+            # pre-decode retire: max_new_tokens=0 must emit no tokens
+            finished.extend(self._retire_paged(limit_only=True))
+            self._decode_once_paged()
+            finished.extend(self._retire_paged())
+        return finished
+
+    def _prefill_once(self) -> None:
+        """Advance every pending prompt by one batched chunk."""
+        codebooks = (self.cfg.n_codebooks
+                     if self.cfg.family == "audio" else 0)
+        batch = self.sched.prefill_batch(audio_codebooks=codebooks)
+        if batch is None:
+            return
+        tokens, pos0, seq_lens, lanes = batch
+        bt, _ = self.alloc.device_tables()
+        logits, self.pages = self._prefill_paged(
+            self.params, self.pages, bt, jnp.asarray(tokens),
+            jnp.asarray(pos0), jnp.asarray(seq_lens))
+        lg = np.asarray(logits)
+        for slot, n_real in lanes:
+            req = self.sched.slot_req[slot]
+            req.prefill_pos += n_real
+            self.alloc.pos[slot] += n_real
+            if req.prefill_pos >= len(req.prefill_tokens):
+                req.last_logits = lg[slot, -1]
+
+    def _decode_once_paged(self) -> None:
+        lanes = self.sched.decode_lanes()
+        # page grant first (may preempt): a preempted lane drops out of
+        # this step and resumes via re-prefill with identical greedy state
+        ready = []
+        for slot, req in lanes:
+            if len(req.output) >= req.max_new_tokens:
+                continue
+            if self.sched.slot_req[slot] is not req:
+                continue  # preempted by an earlier lane's grant this loop
+            if self.sched.grant_decode_page(slot):
+                ready.append((slot, req))
+        # a later grant may have preempted an earlier-granted lane: keep
+        # only lanes still resident
+        ready = [(s, r) for s, r in ready if self.sched.slot_req[s] is r]
+        if not ready:
+            return
+        updates: Dict[int, int] = {}
+        for slot, req in ready:
+            tok = self._sample_next(req)
+            if not req.output and req.ttft is None:
+                req.ttft = time.perf_counter() - self._run_t0
+            req.output.append(tok)
+            updates[slot] = tok
+        tokens = self._lane_tokens(updates)
+        active = jnp.asarray(
+            [s in updates for s in range(self.n_slots)])
+        bt, pos = self.alloc.device_tables()
+        logits, self.pages = self._decode_paged(
+            self.params, self.pages, bt, pos, active, tokens)
+        lg = np.asarray(logits)
+        for slot, req in ready:
+            self.alloc.pos[slot] += 1
+            req.last_logits = lg[slot, -1]
+
+    def _retire_paged(self, limit_only: bool = False) -> List[Request]:
+        done = []
+        for slot, req in enumerate(self.sched.slot_req):
+            if req is None:
+                continue
+            if self._should_retire(req, limit_only):
+                req.done = True
+                done.append(req)
+                self.alloc.free_slot(slot)
+                self.sched.slot_req[slot] = None
+        return done
+
+    # ================================================== slots internals
+    def _run_slots(self) -> List[Request]:
         finished: List[Request] = []
         while self.queue or any(r is not None for r in self.slot_req):
             self._admit()
+            # pre-decode retire: max_new_tokens=0 must emit no tokens
+            finished.extend(self._retire(limit_only=True))
             self._decode_one()
             finished.extend(self._retire())
         return finished
 
-    # ------------------------------------------------------------- internals
     def _admit(self):
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.popleft()
                 self.slot_req[slot] = req
+                self._reset_slot(slot)
                 self._prefill_slot(slot, req)
+
+    def _reset_slot(self, slot: int):
+        """Reset one slot's cache state before reuse.
+
+        Without this a request admitted into a retired request's slot
+        inherits its predecessor's cache position — the old engine silently
+        decoded with the previous request's KV prefix (and, for ssm/hybrid,
+        recurrent state) as context.  Only ``pos`` and the read-modify-write
+        recurrent leaves (``conv``/``h``) need clearing: stale K/V at
+        positions <= cur_pos is always freshly overwritten before it is
+        read, and positions beyond cur_pos are masked.
+        """
+
+        def reset(path, leaf):
+            top = path[0].key if hasattr(path[0], "key") else None
+            if top == "pos":
+                return leaf.at[slot].set(0)
+            if top in ("conv", "h"):
+                unstacked = any(
+                    isinstance(p, jax.tree_util.SequenceKey) for p in path)
+                idx = (slot,) if unstacked else (slice(None), slot)
+                return leaf.at[idx].set(0)
+            return leaf
+
+        self.cache = jax.tree_util.tree_map_with_path(reset, self.cache)
 
     def _prefill_slot(self, slot: int, req: Request):
         """Prompt tokens enter the slot's cache via sequential decode (one
-        slot at a time; the batched-prefill path is exercised by the
-        prefill_32k dry-run cells)."""
+        slot at a time — the legacy baseline; the paged engine replaces
+        this loop with batched chunked prefill)."""
+        logits = None
         for t in req.prompt:
             tok = self._slot_tokens({slot: t})
             logits, self.cache = self._masked_step(tok, only_slot=slot)
-        req._last_logits = np.asarray(logits[slot, -1])
+        req.last_logits = np.asarray(logits[slot, -1])
 
     def _slot_tokens(self, updates: Dict[int, int]) -> jnp.ndarray:
         if self.cfg.family == "audio":
@@ -123,6 +367,8 @@ class ServeEngine:
                 toks[s, 0] = t
         return jnp.asarray(toks)
 
+    _lane_tokens = _slot_tokens  # paged mode: same (B, 1[, K]) layout
+
     def _masked_step(self, tokens, only_slot: Optional[int] = None):
         """Advance decode; slots other than ``only_slot`` (when given) have
         their cache position frozen by restoring pos afterwards."""
@@ -134,18 +380,24 @@ class ServeEngine:
         return logits, self.cache
 
     def _merge_cache(self, old, new, keep: jnp.ndarray):
-        def merge(o, n):
+        def merge(path, o, n):
             if o.ndim == 0 or o.shape == ():
                 return n
-            # batch axis position differs by leaf: pos is (B,), k/v are
-            # (L, B, ...), conv/h are (L, B, ...)
-            if o.shape[0] == self.n_slots:
-                k = keep.reshape((-1,) + (1,) * (o.ndim - 1))
-            else:
-                k = keep.reshape((1, -1) + (1,) * (o.ndim - 2))
-            return jnp.where(k, n, o)
+            # the batch (slot) axis position differs by leaf: ``pos`` and
+            # unstacked tuple entries are (B, ...), stacked k/v/conv/h are
+            # (L, B, ...).  Decide from the leaf's path, not its shape —
+            # shape[0] == n_slots is ambiguous whenever n_layers happens
+            # to equal n_slots (the old heuristic then merged along the
+            # layer axis and corrupted every slot).
+            top = path[0].key if hasattr(path[0], "key") else None
+            unstacked = any(
+                isinstance(p, jax.tree_util.SequenceKey) for p in path)
+            batch_ax = 0 if (top == "pos" or unstacked or o.ndim < 2) else 1
+            shape = [1] * o.ndim
+            shape[batch_ax] = -1
+            return jnp.where(keep.reshape(shape), n, o)
 
-        return jax.tree.map(merge, old, new)
+        return jax.tree_util.tree_map_with_path(merge, old, new)
 
     def _decode_one(self):
         active = {s: r for s, r in enumerate(self.slot_req) if r is not None}
@@ -153,12 +405,13 @@ class ServeEngine:
             return
         updates = {}
         for slot, req in active.items():
-            last = getattr(req, "_last_logits", None)
-            if last is None:
+            if req.last_logits is None:
                 continue
-            self.key, sub = jax.random.split(self.key)
-            tok = int(sample(jnp.asarray(last[None]), sub,
-                             self.scfg.temperature, self.scfg.top_k)[0])
+            if len(req.output) >= req.max_new_tokens:
+                continue
+            tok = self._sample_next(req)
+            if not req.output and req.ttft is None:
+                req.ttft = time.perf_counter() - self._run_t0
             req.output.append(tok)
             updates[slot] = tok
         if not updates:
@@ -169,17 +422,38 @@ class ServeEngine:
         self.cache = self._merge_cache(self.cache, new_cache, keep)
         lg = np.asarray(logits)
         for slot in updates:
-            self.slot_req[slot]._last_logits = lg[slot, -1]
+            self.slot_req[slot].last_logits = lg[slot, -1]
 
-    def _retire(self) -> List[Request]:
+    def _retire(self, limit_only: bool = False) -> List[Request]:
         done = []
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
-            limit = len(req.output) >= req.max_new_tokens
-            overflow = len(req.prompt) + len(req.output) >= self.max_len - 1
-            if limit or overflow:
+            if self._should_retire(req, limit_only):
                 req.done = True
                 done.append(req)
                 self.slot_req[slot] = None
         return done
+
+    # ------------------------------------------------------------ shared
+    def _sample_next(self, req: Request) -> int:
+        """Sample the next token from a request's last logits.
+
+        ``last_logits`` is ``(V,)``, or ``(K, V)`` for audio — the engine's
+        token stream carries one id broadcast across codebooks, so the
+        audio path samples codebook 0 (the seed engine crashed here trying
+        to scalar-convert a (K,) sample).
+        """
+        last = jnp.asarray(req.last_logits)
+        if last.ndim == 1:
+            last = last[None]
+        self.key, sub = jax.random.split(self.key)
+        return int(sample(last, sub, self.scfg.temperature,
+                          self.scfg.top_k)[0])
+
+    def _should_retire(self, req: Request, limit_only: bool) -> bool:
+        limit = len(req.output) >= req.max_new_tokens
+        if limit_only:
+            return limit
+        overflow = len(req.prompt) + len(req.output) >= self.max_len - 1
+        return limit or overflow

@@ -1,0 +1,206 @@
+"""Paged KV cache: fixed-size pages, per-request block tables, free-list
+allocation — the serving-side analogue of IMAGine's memory-capacity scaling
+argument.  Decode throughput scales with how many requests' KV state the
+page pool can hold, not with the worst-case ``n_slots * max_len`` rectangle
+the fixed-slot engine reserves.
+
+Two pieces:
+
+* :class:`KVPages` — the device-side page pool, a registered JAX pytree.
+  Storage is ``(L, P, page_size, Hkv, Dh)`` per K and V: every layer sees
+  the same physical page ids, so one ``(B, n_blocks)`` block table per
+  request addresses all layers.  With ``kv_bits=8`` the pools are int8
+  bit-planed (per-(token, head) scales ride along as ``(L, P, page_size,
+  Hkv)`` bf16 pools) — the ``EnginePlan.kv_bits`` knob applied to the
+  cache exactly as ``plan.bits`` is applied to the weights.
+
+* :class:`PageAllocator` — the host-side free list and block-table
+  bookkeeping: capacity-based admission (``can_admit``), on-demand page
+  grants during decode (``ensure``), and whole-request reclaim
+  (``free_slot``).  Physical page 0 is reserved as the *null page*: idle
+  batch lanes and masked prefill positions scatter there, so the jitted
+  model functions never need a dynamic shape or a write-predicate.
+
+The allocator is deliberately numpy/host-side — the jitted paged decode
+and chunked prefill steps (``repro.models.transformer``) only ever see the
+``KVPages`` arrays plus ``(block_tables, pos, active)`` index arrays.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+
+NULL_PAGE = 0  # physical page 0 is never allocated; garbage writes land here
+
+# families whose KV state is pageable (ssm/hybrid keep O(1) recurrent
+# state and stay on the fixed-slot engine); the single source of truth
+# for both init_kv_pages and ServeEngine's mode="auto" selection
+PAGED_FAMILIES = ("dense", "vlm", "audio", "moe")
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPages:
+    """Device-side paged KV pool for all layers (a registered JAX pytree).
+
+    ``k`` / ``v``: ``(L, P, page_size, Hkv, Dh)`` in the cache storage dtype
+    (int8 when ``kv_bits=8``).  ``k_scale`` / ``v_scale``: per-(token, head)
+    dequantization scales ``(L, P, page_size, Hkv)``, ``None`` unless the
+    pool is quantized.  ``page_size`` and ``kv_bits`` are static aux data.
+    """
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    k_scale: Optional[jnp.ndarray]
+    v_scale: Optional[jnp.ndarray]
+    page_size: int
+    kv_bits: int
+
+    # ------------------------------------------------------------- helpers
+    @property
+    def n_pages(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+    def replace(self, **kw) -> "KVPages":
+        return dataclasses.replace(self, **kw)
+
+    def nbytes(self) -> int:
+        leaves = [self.k, self.v]
+        if self.quantized:
+            leaves += [self.k_scale, self.v_scale]
+        return int(sum(l.size * l.dtype.itemsize for l in leaves))
+
+
+def _kvpages_flatten(p: KVPages):
+    children = ((jax.tree_util.DictKey("k"), p.k),
+                (jax.tree_util.DictKey("v"), p.v),
+                (jax.tree_util.DictKey("k_scale"), p.k_scale),
+                (jax.tree_util.DictKey("v_scale"), p.v_scale))
+    return children, (p.page_size, p.kv_bits)
+
+
+def _kvpages_unflatten(aux, children) -> KVPages:
+    page_size, kv_bits = aux
+    k, v, ks, vs = children
+    return KVPages(k, v, ks, vs, page_size, kv_bits)
+
+
+jax.tree_util.register_pytree_with_keys(
+    KVPages, _kvpages_flatten,
+    lambda aux, children: _kvpages_unflatten(aux, children))
+
+
+def init_kv_pages(cfg: ModelConfig, n_pages: int, page_size: int,
+                  dtype=None, kv_bits: int = 0) -> KVPages:
+    """Allocate an all-zeros page pool for ``cfg`` (attention families).
+
+    ``kv_bits=8`` allocates int8 pools plus bf16 scale pools — the same
+    layout :func:`repro.models.transformer.init_cache` uses for its int8
+    cache, paged.
+    """
+    if cfg.family not in PAGED_FAMILIES:
+        raise ValueError(
+            f"paged KV serves attention-KV families only; {cfg.family!r} "
+            "keeps O(1) state and stays on the fixed-slot engine")
+    if kv_bits not in (0, 8):
+        raise ValueError(f"kv_bits must be 0/8, got {kv_bits}")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    if kv_bits:
+        dtype = jnp.int8
+    dh, hkv, nl = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.n_layers
+    shape = (nl, n_pages, page_size, hkv, dh)
+    k = jnp.zeros(shape, dtype)
+    v = jnp.zeros(shape, dtype)
+    ks = vs = None
+    if kv_bits:
+        sshape = (nl, n_pages, page_size, hkv)
+        ks = jnp.zeros(sshape, jnp.bfloat16)
+        vs = jnp.zeros(sshape, jnp.bfloat16)
+    return KVPages(k, v, ks, vs, page_size, kv_bits)
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Physical pages needed to hold ``n_tokens``."""
+    return max(0, math.ceil(n_tokens / page_size))
+
+
+class PageAllocator:
+    """Host-side block tables + free list over a :class:`KVPages` pool.
+
+    ``n_slots`` batch lanes each own a ``(max_blocks,)`` block table row
+    (logical block i -> physical page id; ``NULL_PAGE`` where unmapped) and
+    a token count ``pos``.  Pages come from one shared free list, so total
+    physical capacity is ``(n_pages - 1) * page_size`` tokens across all
+    lanes instead of ``n_slots * max_len``.
+    """
+
+    def __init__(self, n_pages: int, page_size: int, n_slots: int,
+                 max_len: int):
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.n_slots = n_slots
+        self.max_blocks = pages_for(max_len, page_size)
+        if n_pages < self.max_blocks + 1:
+            raise ValueError(
+                f"n_pages={n_pages} cannot hold one max_len={max_len} "
+                f"request (needs {self.max_blocks} pages + the null page)")
+        # page 0 is the null page; everything else starts free (LIFO reuse)
+        self.free: List[int] = list(range(n_pages - 1, NULL_PAGE, -1))
+        self.block_tables = np.full((n_slots, self.max_blocks), NULL_PAGE,
+                                    np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+
+    # ----------------------------------------------------------- capacity
+    @property
+    def free_pages(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self.free)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Capacity-based admission: is there room for a request whose
+        prompt is ``n_tokens`` plus one decode token?"""
+        return pages_for(n_tokens + 1, self.page_size) <= len(self.free)
+
+    # --------------------------------------------------------- allocation
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s block table to cover ``n_tokens`` logical tokens.
+        Returns False (allocating nothing) if the free list runs dry."""
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_blocks:
+            raise ValueError(
+                f"slot {slot} wants {n_tokens} tokens > max_len capacity")
+        have = len(self._owned[slot])
+        if need - have > len(self.free):
+            return False
+        for blk in range(have, need):
+            page = self.free.pop()
+            self._owned[slot].append(page)
+            self.block_tables[slot, blk] = page
+        return True
+
+    def free_slot(self, slot: int) -> None:
+        """Reclaim every page the slot owns (request retired or preempted)."""
+        self.free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.block_tables[slot, :] = NULL_PAGE
+        self.pos[slot] = 0
+
+    # -------------------------------------------------------------- views
+    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(block_tables, pos) as device arrays for the jitted steps."""
+        return jnp.asarray(self.block_tables), jnp.asarray(self.pos)

@@ -1,0 +1,159 @@
+"""Scheduling policy for the paged continuous-batching engine.
+
+The scheduler owns the request queue and the slot (batch-lane) table and
+makes three kinds of decisions, all host-side and all against the
+:class:`~repro.serve.pages.PageAllocator`:
+
+* **Admission** — FCFS, capacity-based: the head-of-queue request is
+  admitted into a free lane only when the page pool can hold its whole
+  prefill (prompt, plus any tokens it generated before a preemption) and
+  one decode token.  Pages are granted up front, so chunked prefill never
+  allocates mid-flight.
+
+* **Chunked batched prefill** — every admitted-but-unfinished request
+  contributes its next ≤ ``chunk`` prompt tokens to one batched
+  ``prefill_chunk`` call (replacing the old per-token ``_prefill_slot``
+  loop: one forward per chunk across all pending lanes instead of one
+  decode step per prompt token per request).  Chunks interleave with
+  decode steps, so long prompts do not stall running generations for
+  their whole prefill.
+
+* **Preemption** — when decode needs a page and the free list is dry, the
+  *longest-running* request (earliest admission still resident) is
+  evicted: its pages are reclaimed, and it re-enters the queue head with
+  ``prompt + generated-so-far`` as its new prefill (recompute-style
+  preemption — nothing is swapped out, greedy decode resumes exactly
+  where it left off).
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.pages import PageAllocator
+
+PrefillBatch = Tuple[np.ndarray, np.ndarray, np.ndarray,
+                     List[Tuple[int, int]]]
+
+
+class PagedScheduler:
+    """Admission + prefill batching + preemption over ``n_slots`` lanes."""
+
+    def __init__(self, alloc: PageAllocator, chunk: int):
+        self.alloc = alloc
+        self.chunk = int(chunk)
+        if self.chunk < 1:
+            raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
+        self.n_slots = alloc.n_slots
+        self.queue: Deque = collections.deque()
+        self.slot_req: List[Optional[object]] = [None] * self.n_slots
+        self.preemptions = 0
+        self._admit_seq = 0
+
+    # ------------------------------------------------------------- queue
+    def submit(self, req) -> None:
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(
+            r is not None for r in self.slot_req)
+
+    # --------------------------------------------------------- admission
+    def admit(self) -> None:
+        """FCFS admission while a lane is free and capacity allows."""
+        for slot in range(self.n_slots):
+            if not self.queue:
+                return
+            if self.slot_req[slot] is not None:
+                continue
+            req = self.queue[0]
+            if not self.alloc.can_admit(len(req.prefill_tokens)):
+                return  # head-of-line blocks: keep arrival order
+            self.queue.popleft()
+            self.slot_req[slot] = req
+            req.prefill_pos = 0
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
+            ok = self.alloc.ensure(slot, len(req.prefill_tokens) + 1)
+            assert ok, "can_admit granted but ensure failed"
+
+    # ----------------------------------------------------------- prefill
+    def prefill_batch(self, audio_codebooks: int = 0
+                      ) -> Optional[PrefillBatch]:
+        """Assemble the next chunked prefill batch across pending lanes.
+
+        Returns ``(tokens, pos0, seq_lens, [(slot, n_real), ...])`` with
+        ``tokens`` shaped ``(n_slots, chunk)`` (``(n_slots, chunk, K)``
+        for audio), or ``None`` when nothing is pending.
+        """
+        lanes: List[Tuple[int, int]] = []
+        c = self.chunk
+        tokens = np.zeros((self.n_slots, c), np.int32)
+        pos0 = np.zeros((self.n_slots,), np.int32)
+        seq_lens = np.zeros((self.n_slots,), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is None or req.prefill_pos >= len(req.prefill_tokens):
+                continue
+            n_real = min(c, len(req.prefill_tokens) - req.prefill_pos)
+            tokens[slot, :n_real] = req.prefill_tokens[
+                req.prefill_pos:req.prefill_pos + n_real]
+            pos0[slot] = req.prefill_pos
+            seq_lens[slot] = req.prefill_pos + n_real
+            lanes.append((slot, n_real))
+        if not lanes:
+            return None
+        if audio_codebooks > 1:  # one EnCodec token broadcast per codebook
+            tokens = np.broadcast_to(
+                tokens[..., None],
+                tokens.shape + (audio_codebooks,)).copy()
+        return tokens, pos0, seq_lens, lanes
+
+    def decode_lanes(self) -> List[Tuple[int, object]]:
+        """Lanes whose request is fully prefilled and ready to decode."""
+        return [
+            (s, r) for s, r in enumerate(self.slot_req)
+            if r is not None
+            and r.prefill_pos >= len(r.prefill_tokens)
+            and r.last_logits is not None
+        ]
+
+    # -------------------------------------------------------- preemption
+    def grant_decode_page(self, slot: int) -> bool:
+        """Make room for slot's next decode token, preempting the
+        longest-running other request if the free list is dry.  Returns
+        False only when no victim remains (the lane must then wait)."""
+        if self.slot_req[slot] is None:
+            return False  # no resident request: never grow an empty slot
+        want = int(self.alloc.pos[slot]) + 1
+        while not self.alloc.ensure(slot, want):
+            victim_slot = self._pick_victim(exclude=slot)
+            if victim_slot is None:
+                return False
+            self._preempt(victim_slot)
+        return True
+
+    def _pick_victim(self, exclude: int) -> Optional[int]:
+        """Longest-running resident request = earliest admission."""
+        best, best_seq = None, None
+        for slot, req in enumerate(self.slot_req):
+            if req is None or slot == exclude:
+                continue
+            seq = req.admit_seq
+            if best_seq is None or seq < best_seq:
+                best, best_seq = slot, seq
+        return best
+
+    def _preempt(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        self.alloc.free_slot(slot)
+        self.slot_req[slot] = None
+        # recompute-style: everything generated so far becomes prefill
+        req.prefill_tokens = list(req.prompt) + list(req.output)
+        req.prefill_pos = 0
+        req.last_logits = None
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.appendleft(req)

@@ -1,0 +1,158 @@
+"""Fixed-slot ``ServeEngine`` edge cases (the satellite checklist):
+empty-prompt and over-long-prompt rejection, ``Request.last_logits`` as a
+real field, ``max_new_tokens=0``, frozen-slot cache bit-identity under
+``_merge_cache``, and the slot-reuse / layer-axis regressions found while
+building the paged engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config.base import ServeConfig
+from repro.models import init_params
+from repro.serve import Request, ServeEngine
+
+from conftest import reduced_f32
+
+
+def _mk(arch="qwen2.5-3b", seed=0):
+    cfg = reduced_f32(arch)
+    return cfg, init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _engine(cfg, params, mode, **kw):
+    kw.setdefault("n_slots", 2)
+    kw.setdefault("max_len", 32)
+    scfg = kw.pop("scfg", ServeConfig(max_new_tokens=4))
+    return ServeEngine(cfg, params, scfg, mode=mode, **kw)
+
+
+# ------------------------------------------------------------ submission
+@pytest.mark.parametrize("mode", ["slots", "paged"])
+def test_empty_prompt_rejected(mode):
+    """Defined behaviour for ``prompt == []``: reject at submit (the old
+    engine crashed later with an unbound ``logits`` and a stalled slot)."""
+    cfg, params = _mk()
+    eng = _engine(cfg, params, mode)
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit([])
+    # the engine is still usable afterwards
+    eng.submit([1, 2])
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+@pytest.mark.parametrize("mode", ["slots", "paged"])
+def test_prompt_longer_than_max_len_rejected(mode):
+    cfg, params = _mk()
+    eng = _engine(cfg, params, mode, max_len=16)
+    for n in (16, 15):  # >= max_len - 1: no room to generate
+        with pytest.raises(ValueError, match="cannot fit"):
+            eng.submit(list(range(1, n + 1)))
+    # max_len - 2 is the longest admissible prompt: exactly one token fits
+    req = eng.submit(list(range(1, 15)), max_new_tokens=100)
+    done = eng.run()
+    assert done == [req] and len(req.output) == 1
+
+
+# --------------------------------------------------------------- request
+def test_last_logits_is_a_real_field():
+    names = {f.name for f in dataclasses.fields(Request)}
+    assert "last_logits" in names
+    req = Request(0, [1], 4)
+    assert req.last_logits is None
+    req._last_logits = np.zeros((3,))  # deprecated alias still writes it
+    assert req.last_logits is not None and req._last_logits is req.last_logits
+
+
+@pytest.mark.parametrize("mode", ["slots", "paged"])
+def test_max_new_tokens_zero(mode):
+    """max_new_tokens=0 retires with an empty output (the old loop decoded
+    one token before the limit check ran)."""
+    cfg, params = _mk()
+    eng = _engine(cfg, params, mode)
+    r0 = eng.submit([1, 2, 3], max_new_tokens=0)
+    r1 = eng.submit([4, 5], max_new_tokens=3)
+    done = eng.run()
+    assert len(done) == 2
+    assert r0.done and r0.output == []
+    assert r1.done and len(r1.output) == 3
+
+
+# ---------------------------------------------------- cache isolation
+def _slot_view(cache, slot):
+    """Per-slot numpy view of every cache leaf (pos is (B,), stacked
+    leaves are (L, B, ...))."""
+
+    def take(path, leaf):
+        leaf = np.asarray(leaf)
+        top = path[0].key if hasattr(path[0], "key") else None
+        unstacked = any(
+            isinstance(p, jax.tree_util.SequenceKey) for p in path)
+        if top == "pos" or unstacked or leaf.ndim < 2:
+            return leaf[slot]
+        return leaf[:, slot]
+
+    return jax.tree_util.tree_map_with_path(take, cache)
+
+
+def test_frozen_slot_cache_bit_identical():
+    """While one slot prefills, every other slot's cache (and pos) must be
+    bit-identical before/after — ``_merge_cache`` freezes them."""
+    cfg, params = _mk()
+    eng = _engine(cfg, params, "slots", n_slots=2)
+    eng.submit([1, 2, 3])
+    eng._admit()                      # request 0 prefilled into slot 0
+    before = _slot_view(eng.cache, 0)
+    eng.submit([7, 8, 9, 10, 11])
+    eng._admit()                      # request 1 prefills into slot 1
+    after = _slot_view(eng.cache, 0)
+    for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        np.testing.assert_array_equal(b, a)
+
+
+def test_merge_cache_when_n_slots_equals_n_layers(rng):
+    """Regression: with n_slots == n_layers the old shape[0]-based axis
+    guess in ``_merge_cache`` merged along the *layer* axis, corrupting
+    every slot.  Ground truth is the isolated single-slot engine."""
+    cfg, params = _mk(seed=2)
+    assert cfg.n_layers == 3  # the collision this test exists for
+    prompts = [[1, 2, 3], [4], [5, 6], [7, 8, 9]]
+    scfg = ServeConfig(max_new_tokens=6)
+
+    ref = {}
+    for i, p in enumerate(prompts):
+        eng = _engine(cfg, params, "slots", n_slots=1, scfg=scfg)
+        req = eng.submit(p)
+        eng.run()
+        ref[i] = req.output
+
+    eng = _engine(cfg, params, "slots", n_slots=3, scfg=scfg)
+    reqs = [eng.submit(p) for p in prompts]
+    eng.run()
+    for i, req in enumerate(reqs):
+        assert req.output == ref[i], (i, req.output, ref[i])
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-3b", "mamba2-130m"])
+def test_slot_reuse_resets_state(arch):
+    """Regression: a request admitted into a retired request's slot used to
+    inherit its predecessor's cache position (and, for recurrent families,
+    conv/h state) and decode with the previous request as context."""
+    cfg, params = _mk(arch, seed=3)
+    scfg = ServeConfig(max_new_tokens=5)
+
+    solo = _engine(cfg, params, "slots", n_slots=1, scfg=scfg)
+    expected = solo.submit([9, 8, 7])
+    solo.run()
+
+    eng = _engine(cfg, params, "slots", n_slots=1, scfg=scfg)
+    first = eng.submit([1, 2, 3, 4])
+    second = eng.submit([9, 8, 7])   # waits, then reuses slot 0
+    eng.run()
+    assert first.done and second.done
+    assert second.output == expected.output, (
+        second.output, expected.output)
