@@ -1,0 +1,186 @@
+#!/usr/bin/env python
+"""Mesh-native serving benchmark: paged decode tokens/sec vs mesh size.
+
+Forces a multi-device CPU host (``xla_force_host_platform_device_count``,
+set before jax imports) and serves the same request stream through the
+paged engine on a ladder of ``(data, model)`` meshes:
+
+  * ``mesh=None``       — the single-device paged baseline;
+  * ``(1, m)``          — model-parallel only: KV heads + TP weights over
+                          ``model`` (GEMV bit-planes spread over banks,
+                          the paper's scaling axis);
+  * ``(d, m)``          — full production layout: lanes + pages over
+                          ``data`` on top.
+
+Every mesh point must produce *token-identical* greedy output to the
+baseline (the correctness gate — pages and shards move bytes, never
+tokens); tokens/sec per mesh is recorded in ``BENCH_shard.json``.  Host
+CPU "devices" share the same cores, so absolute scaling here only smoke-
+checks the machinery — the recorded curve is the artifact the real-TPU
+run fills in.
+
+The full run adds a ``sharded``-backend point (int8 weights shard_mapped
+over ``model``, ``EngineConfig.sharded=True``).
+
+  PYTHONPATH=src python benchmarks/shard_bench.py            # full ladder
+  PYTHONPATH=src python benchmarks/shard_bench.py --smoke    # CI
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+N_DEV = int(os.environ.get("SHARD_BENCH_DEVICES", "8"))
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={N_DEV} "
+        + os.environ.get("XLA_FLAGS", ""))
+
+
+def _build(arch: str):
+    import jax
+
+    from repro.config import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serve(cfg, params, prompts, *, mesh=None, max_new: int, n_slots: int,
+           max_len: int = 64, engine=None, page_size: int = 8,
+           prefill_chunk: int = 16):
+    import time as _t
+
+    from repro.config.base import EngineConfig, ServeConfig
+    from repro.serve import ServeEngine
+
+    scfg = ServeConfig(max_new_tokens=max_new,
+                       engine=engine or EngineConfig(),
+                       page_size=page_size, prefill_chunk=prefill_chunk)
+    eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
+                      mode="paged", mesh=mesh)
+    eng.submit(prompts[0][:4], max_new_tokens=2)   # warm the jits
+    eng.run()
+    for p in prompts:
+        eng.submit(p)
+    t0 = _t.perf_counter()
+    done = eng.run()
+    wall = _t.perf_counter() - t0
+    gen = sum(len(r.output) for r in done)
+    return {
+        "gen_tokens": gen,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(gen / wall, 2) if wall > 0 else 0.0,
+    }, {r.rid: r.output for r in done}
+
+
+def run(meshes=((1, 2), (1, 4), (1, 8), (2, 4)), arch: str = "qwen2.5-3b",
+        n_slots: int = 4, n_reqs: int = 8, prompt_len: int = 8,
+        max_new: int = 8, with_sharded_weights: bool = True,
+        out: str = "BENCH_shard.json"):
+    """Returns the repo-standard (name, us_per_call, derived) CSV rows."""
+    from repro.dist import make_mesh
+
+    cfg, params = _build(arch)
+    prompts = [
+        [(7 * i + j) % cfg.vocab_size for j in range(prompt_len + i % 4)]
+        for i in range(n_reqs)
+    ]
+    results, rows = [], []
+
+    base_res, base_out = _serve(cfg, params, prompts, mesh=None,
+                                max_new=max_new, n_slots=n_slots)
+    results.append({"mesh": None, "mode": "paged", **base_res})
+    rows.append(("shard_serve_1dev",
+                 round(1e6 * base_res["wall_s"]
+                       / max(base_res["gen_tokens"], 1), 1),
+                 f"tok/s={base_res['tok_per_s']}"))
+
+    identical = True
+    for shape in meshes:
+        mesh = make_mesh(tuple(shape), ("data", "model"))
+        res, outs = _serve(cfg, params, prompts, mesh=mesh,
+                           max_new=max_new, n_slots=n_slots)
+        identical &= outs == base_out
+        results.append({"mesh": list(shape), "mode": "paged", **res})
+        name = f"shard_serve_{shape[0]}x{shape[1]}"
+        rows.append((name,
+                     round(1e6 * res["wall_s"]
+                           / max(res["gen_tokens"], 1), 1),
+                     f"tok/s={res['tok_per_s']}"))
+
+    if with_sharded_weights:
+        from repro.config.base import EngineConfig
+
+        shape = tuple(meshes[-1])
+        mesh = make_mesh(shape, ("data", "model"))
+        eng8 = EngineConfig(weight_bits=8, backend="reference")
+        ref_res, ref_out = _serve(cfg, params, prompts, mesh=None,
+                                  max_new=max_new, n_slots=n_slots,
+                                  engine=eng8)
+        res, outs = _serve(
+            cfg, params, prompts, mesh=mesh, max_new=max_new,
+            n_slots=n_slots,
+            engine=dataclasses.replace(eng8, sharded=True))
+        identical &= outs == ref_out
+        results.append({"mesh": list(shape), "mode": "paged_sharded_w8",
+                        **res})
+        results.append({"mesh": None, "mode": "paged_w8", **ref_res})
+        rows.append((f"shard_serve_w8_{shape[0]}x{shape[1]}",
+                     round(1e6 * res["wall_s"]
+                           / max(res["gen_tokens"], 1), 1),
+                     f"tok/s={res['tok_per_s']}"))
+
+    record = {
+        "bench": "shard",
+        "arch": arch,
+        "reduced": True,
+        "dtype": "float32",
+        "host_devices": N_DEV,
+        "workload": {"n_slots": n_slots, "n_reqs": n_reqs,
+                     "prompt_len": prompt_len, "max_new": max_new},
+        "results": results,
+        "token_identical": bool(identical),
+        "tok_per_s_by_mesh": {
+            ("1dev" if r["mesh"] is None else "x".join(map(str, r["mesh"])))
+            + ("" if r["mode"] == "paged" else f":{r['mode']}"):
+                r["tok_per_s"]
+            for r in results
+        },
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {out}")
+    return rows, record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: one mesh point, short generations")
+    ap.add_argument("--out", default="BENCH_shard.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows, record = run(meshes=((2, 4),), max_new=6, n_reqs=4,
+                           with_sharded_weights=False, out=args.out)
+    else:
+        rows, record = run(out=args.out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(",".join(str(v) for v in row))
+    if not record["token_identical"]:
+        raise SystemExit(
+            "sharded paged outputs diverged from the single-device engine")
+    print(f"# tok/s by mesh: {record['tok_per_s_by_mesh']}  "
+          f"token_identical={record['token_identical']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -264,6 +264,11 @@ class EngineConfig:
         ``repro.engine.resolve_plan``, into an ``EnginePlan``.
     ``use_pallas``: DEPRECATED legacy knob, honoured only when ``backend``
         is "auto" (False pins the "reference" backend).
+    ``sharded``: wrap ``backend`` in the mesh-native ``sharded`` dispatch
+        (shard_map over the mesh's model axis; the mesh itself is supplied
+        at plan resolution — ``resolve_plan(cfg, mesh=...)``).
+    ``psum_bits``: row-parallel partial-GEMV reduction precision for the
+        sharded backend (0 = exact fp32 psum, 4/8 = compressed codes).
     """
 
     weight_bits: int = 0
@@ -274,6 +279,8 @@ class EngineConfig:
     use_pallas: bool = True      # DEPRECATED: pre-EnginePlan dispatch knob
     tile_m: int = 256            # engine tile rows   (PE columns per tile)
     tile_k: int = 512            # engine tile depth  (weights streamed E->W)
+    sharded: bool = False        # mesh-native dispatch (docs/sharding.md)
+    psum_bits: int = 0           # 0 = fp32 psum; 4/8 = compressed_psum_leaf
 
     def __post_init__(self):
         if self.weight_bits not in (0, 2, 4, 8):
@@ -282,6 +289,8 @@ class EngineConfig:
             raise ValueError(f"radix must be 1/2/4/8, got {self.radix}")
         if self.kv_bits not in (0, 8):
             raise ValueError(f"kv_bits must be 0/8, got {self.kv_bits}")
+        if self.psum_bits not in (0, 4, 8):
+            raise ValueError(f"psum_bits must be 0/4/8, got {self.psum_bits}")
         if not isinstance(self.backend, str) or not self.backend:
             raise ValueError(f"backend must be a backend name, got "
                              f"{self.backend!r}")

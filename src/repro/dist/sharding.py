@@ -31,10 +31,21 @@ _SPECIAL = {"embed"}
 # engine PackedLinear leaves ride the rules of their owning linear.
 _ENGINE_LEAVES = {"packed", "scale", "bias", "w"}
 
-_STACKED_CACHE_KEYS = {
-    "k", "v", "k_scale", "v_scale", "conv", "h",
-    "k_global", "v_global", "k_local", "v_local",
-}
+# decode-cache / page-pool leaves, by key name.  The stacked slot cache
+# (L, B, T, Hkv, Dh) and the KVPages pool (L, P, page, Hkv, Dh) share one
+# rule set: axis 1 (batch lanes or physical pages) shards over the data
+# axes, the KV-head axis over ``model``.
+_ATTN_KV_KEYS = {"k", "v", "k_global", "v_global", "k_local", "v_local"}
+# int8-cache / quantized-page scale pools: trailing axis is the KV-head
+# axis and must follow its K/V pool's head sharding.
+_KV_SCALE_KEYS = {"k_scale", "v_scale"}
+# host-built paged-serving index state (block tables, per-lane positions,
+# lane-activity masks): lane axis over the data axes, never ``model``.
+_PAGE_STATE_KEYS = {"block_tables", "pos", "active"}
+
+_STACKED_CACHE_KEYS = (
+    _ATTN_KV_KEYS | _KV_SCALE_KEYS | {"conv", "h"} | _PAGE_STATE_KEYS
+)
 
 
 def _key_str(k) -> str:
@@ -181,8 +192,13 @@ def cache_shardings(mesh, cache: Pytree) -> Pytree:
     """Decode-cache shardings: the batch (slot) axis over the data axes and
     KV heads over the model axis when divisible.
 
-    Handles both the stacked ``(L, B, ...)`` layout and the unstacked
-    tuple-of-``(B, ...)`` production layout.
+    Handles the stacked ``(L, B, ...)`` layout, the unstacked
+    tuple-of-``(B, ...)`` production layout, *and* the paged-serving
+    :class:`~repro.serve.pages.KVPages` pytree: its ``(L, P, page, Hkv,
+    Dh)`` pools shard pages-over-data and heads-over-``model``, its scale
+    pools follow their K/V pool's head sharding on the trailing axis, and
+    block tables / positions / activity masks shard their lane axis over
+    the data axes only (they are host-built index state).
     """
     data_axes = _data_axes(mesh)
     sizes = _mesh_sizes(mesh)
@@ -194,17 +210,46 @@ def cache_shardings(mesh, cache: Pytree) -> Pytree:
         if ndim == 0:
             return NamedSharding(mesh, P())
         names = [_key_str(k) for k in path]
-        top = names[0] if names else ""
+        # innermost cache-key name wins, so a KVPages (or cache dict)
+        # nested inside a bigger serve-state tree keeps its rules.
+        name = next(
+            (n for n in reversed(names) if n in _STACKED_CACHE_KEYS),
+            names[-1] if names else "")
         unstacked = any(
             isinstance(k, jax.tree_util.SequenceKey) for k in path)
-        batch_ax = 0 if (top == "pos" or unstacked or ndim < 2) else 1
+        batch_ax = 0 if (name in _PAGE_STATE_KEYS or unstacked
+                         or ndim < 2) else 1
         kept = _divisible_prefix(leaf.shape[batch_ax], data_axes, sizes)
         if kept:
             spec[batch_ax] = kept
-        if (top in ("k", "v", "k_global", "v_global", "k_local", "v_local")
-                and ndim >= 4 and msize
-                and leaf.shape[-2] % msize == 0 and leaf.shape[-2] > 0):
-            spec[-2] = "model"  # KV-head axis
+        head_ax = None
+        if name in _ATTN_KV_KEYS and ndim >= 4:
+            head_ax = -2                  # (..., T/page, Hkv, Dh)
+        elif name in _KV_SCALE_KEYS and ndim >= 3:
+            head_ax = -1                  # (..., T/page, Hkv)
+        if (head_ax is not None and msize and leaf.shape[head_ax] > 0
+                and leaf.shape[head_ax] % msize == 0):
+            spec[head_ax] = "model"       # KV-head axis
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def pool_pages_for_mesh(n_pages: int, mesh) -> int:
+    """Round a page-pool size up so the physical page axis shards evenly
+    over the data axes.
+
+    Pages-over-data needs ``n_pages`` divisible by the data-axes product
+    (the null page makes natural pool sizes odd); padding only adds spare
+    capacity — the allocator simply has more free pages.  ``mesh=None``
+    (or no data axes) returns ``n_pages`` unchanged.
+    """
+    if mesh is None or n_pages <= 0:
+        return n_pages
+    sizes = _mesh_sizes(mesh)
+    prod = 1
+    for a in _data_axes(mesh):
+        prod *= sizes[a]
+    if prod <= 1:
+        return n_pages
+    return -(-n_pages // prod) * prod

@@ -38,6 +38,7 @@ from repro.engine.packed import (
     as_param_dict,
     is_packed,
     pack_linear,
+    partition_kind,
     validate_bits,
 )
 from repro.engine.plan import (
@@ -46,6 +47,11 @@ from repro.engine.plan import (
     plan_for_bits,
     resolve_plan,
 )
+
+# registers the mesh-native "sharded" backend (shard_map over the model
+# axis; see docs/sharding.md) as an import side effect, exactly like the
+# built-in backends above.
+import repro.engine.sharded  # noqa: E402,F401  isort:skip
 
 __all__ = [
     "EnginePlan",
@@ -59,6 +65,7 @@ __all__ = [
     "get_backend",
     "is_packed",
     "pack_linear",
+    "partition_kind",
     "plan_for_bits",
     "register_backend",
     "resolve_backend_name",

@@ -15,6 +15,10 @@ registered under a string name.  Shipped backends:
   ``pallas_interpret`` the Pallas kernel body interpreted on CPU — used to
                        validate the TPU kernel off-hardware.
   ``pallas_tpu``       the Pallas kernel compiled for TPU hardware.
+  ``sharded``          mesh-native wrapper (``repro.engine.sharded``):
+                       shard_maps any of the above over the plan's model
+                       axis — column/row-parallel PackedLinear shards,
+                       row partials psum-reduced.
 
 ``auto`` resolves from ``jax.default_backend()`` at plan-resolution time:
 TPU hosts get ``pallas_tpu``, everything else gets ``reference``.

@@ -36,7 +36,7 @@ VALID_BITS = (2, 4, 8)
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=("packed", "scale", "bias"),
-    meta_fields=("bits", "in_features", "out_features"),
+    meta_fields=("bits", "in_features", "out_features", "partition"),
 )
 @dataclasses.dataclass(frozen=True)
 class PackedLinear:
@@ -49,6 +49,11 @@ class PackedLinear:
     ``scale``: float32, ``(..., 1, out_features)`` per-output-channel scales.
     ``bias``: optional float, ``(..., out_features)``.
     ``bits``: static python int in ``{2, 4, 8}``.
+    ``partition``: preferred mesh partitioning for the sharded backend —
+    ``"col"`` / ``"row"`` / None (auto).  Set by ``quantize_params`` from
+    the weight's name so the shard_map specs agree with the name-based
+    ``dist.sharding`` placement (a ``wo`` placed row-parallel must not be
+    re-gathered column-parallel inside every decode step).
     """
 
     packed: jnp.ndarray
@@ -57,6 +62,7 @@ class PackedLinear:
     bits: int = 8
     in_features: int = 0
     out_features: int = 0
+    partition: Optional[str] = None
 
     # -------------------------------------------------------------- helpers
     @property
@@ -93,9 +99,17 @@ def pack_linear(
     bits: int = 8,
     *,
     bias: Optional[jnp.ndarray] = None,
+    partition: Optional[str] = None,
 ) -> PackedLinear:
-    """Quantize + bit-pack a float ``(..., K, N)`` weight into engine form."""
+    """Quantize + bit-pack a float ``(..., K, N)`` weight into engine form.
+
+    ``partition``: optional ``"col"`` / ``"row"`` preference for the
+    sharded backend (see :class:`PackedLinear`).
+    """
     bits = validate_bits(bits)
+    if partition not in (None, "col", "row"):
+        raise ValueError(
+            f"partition must be 'col', 'row' or None, got {partition!r}")
     if w.ndim < 2:
         raise ValueError(f"weight must be at least 2D (K, N), got {w.shape}")
     k, n = w.shape[-2], w.shape[-1]
@@ -104,7 +118,7 @@ def pack_linear(
             f"in_features {k} * bits {bits} must pack into whole int8 words")
     q, scale = quantize_symmetric(w, bits, axis=-2)
     packed = pack_weights(q, bits, axis=-2)
-    return PackedLinear(packed, scale, bias, bits, k, n)
+    return PackedLinear(packed, scale, bias, bits, k, n, partition)
 
 
 def as_packed(p: Any, *, bits_hint: Optional[int] = None) -> PackedLinear:
@@ -133,6 +147,36 @@ def as_packed(p: Any, *, bits_hint: Optional[int] = None) -> PackedLinear:
         return PackedLinear(packed, p["scale"], p.get("bias"), bits, k, n)
     raise TypeError(
         f"cannot interpret {type(p).__name__} as an engine PackedLinear")
+
+
+def partition_kind(lin: PackedLinear, msize: int) -> str:
+    """How one packed weight shards over a model axis of size ``msize``.
+
+    ``lin.partition`` states a preference (from the weight's name — the
+    same rule ``dist.sharding`` places it by) and wins whenever its axis
+    divides.  Otherwise ``"col"`` is preferred over ``"row"`` (no
+    collective): the output-feature axis splits evenly.  ``"row"``
+    requires both the packed int8 rows *and* the unpacked feature count
+    to divide, so every shard unpacks whole features.  ``"replicate"``:
+    stacked-expert weights, trivial meshes, or nothing divisible — the
+    degrade-to-replication rule of ``repro.dist.sharding``, never an
+    error.
+    """
+    if lin.packed.ndim != 2 or msize <= 1:
+        return "replicate"
+    col_ok = lin.out_features > 0 and lin.out_features % msize == 0
+    kp = lin.packed.shape[-2]
+    row_ok = (kp % msize == 0 and lin.in_features > 0
+              and lin.in_features % msize == 0)
+    if lin.partition == "row" and row_ok:
+        return "row"
+    if lin.partition == "col" and col_ok:
+        return "col"
+    if col_ok:
+        return "col"
+    if row_ok:
+        return "row"
+    return "replicate"
 
 
 def as_param_dict(lin: PackedLinear) -> dict:

@@ -40,6 +40,15 @@ class EnginePlan:
     ``kv_bits``: beyond-paper bit-planed KV cache (0 = off, 8 = int8).
     ``out_dtype``: None means "match the activation dtype".
     ``block_*``: Pallas kernel tile sizes (batch, PE-column, K-stream).
+
+    Mesh-native fields (the ``sharded`` backend — see ``docs/sharding.md``):
+    ``mesh``: the ``jax.sharding.Mesh`` the sharded backend ``shard_map``s
+        over (None degrades to the wrapped backend unsharded).
+    ``model_axis``: mesh axis name the weight bit-planes shard over.
+    ``inner_backend``: concrete registry name the sharded backend wraps
+        (resolved eagerly, like ``backend``; only set on sharded plans).
+    ``psum_bits``: row-parallel partial-GEMV reduction precision — 0 is an
+        exact fp32 ``psum``, 4/8 route through ``compressed_psum_leaf``.
     """
 
     backend: str
@@ -50,6 +59,10 @@ class EnginePlan:
     block_b: int = 128
     block_n: int = 256
     block_k: int = 512
+    mesh: Any = None
+    model_axis: str = "model"
+    inner_backend: Optional[str] = None
+    psum_bits: int = 0
 
     def __post_init__(self):
         if self.kv_bits not in (0, 8):
@@ -61,10 +74,26 @@ class EnginePlan:
         if self.bits % self.radix != 0:
             raise ValueError(
                 f"radix {self.radix} must divide bits {self.bits}")
+        if self.psum_bits not in (0, 4, 8):
+            raise ValueError(
+                f"psum_bits must be 0/4/8, got {self.psum_bits}")
         # resolve + validate the backend name eagerly: a typo fails at plan
         # resolution, not in the middle of a jitted decode step.
         object.__setattr__(
             self, "backend", resolve_backend_name(self.backend))
+        if self.backend == "sharded":
+            inner = resolve_backend_name(self.inner_backend)
+            if inner == "sharded":
+                raise ValueError(
+                    "the sharded backend cannot wrap itself; pick a "
+                    "single-device inner_backend")
+            object.__setattr__(self, "inner_backend", inner)
+            if (self.mesh is not None
+                    and self.model_axis
+                    not in getattr(self.mesh, "axis_names", ())):
+                raise ValueError(
+                    f"model_axis {self.model_axis!r} not in mesh axes "
+                    f"{tuple(getattr(self.mesh, 'axis_names', ()))}")
 
     # ------------------------------------------------------------------ api
     def apply(self, lin, x: jnp.ndarray, *, out_dtype=None) -> jnp.ndarray:
@@ -102,7 +131,7 @@ class EnginePlan:
 
 
 @functools.lru_cache(maxsize=None)
-def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
+def _resolve_cached(cfg, backend: Optional[str], mesh) -> Optional[EnginePlan]:
     # kv_bits alone enables the engine: the resulting plan carries bits=0
     # (dense weights) but routes the KV cache through int8 pages — the
     # quantized cache runs the same dispatch layer as the weights.
@@ -112,6 +141,12 @@ def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
     if name == "auto" and not getattr(cfg, "use_pallas", True):
         # legacy knob: use_pallas=False meant "exact jnp path, please".
         name = "reference"
+    inner = None
+    if getattr(cfg, "sharded", False) and name != "sharded":
+        # cfg.backend names the *wrapped* backend; "sharded" is the
+        # mesh-native dispatch around it.
+        inner = resolve_backend_name(name)
+        name = "sharded"
     return EnginePlan(
         backend=resolve_backend_name(name),
         bits=cfg.weight_bits,
@@ -119,24 +154,30 @@ def _resolve_cached(cfg, backend: Optional[str]) -> Optional[EnginePlan]:
         kv_bits=cfg.kv_bits,
         block_n=cfg.tile_m,
         block_k=cfg.tile_k,
+        mesh=mesh,
+        inner_backend=inner,
+        psum_bits=getattr(cfg, "psum_bits", 0),
     )
 
 
-def resolve_plan(cfg, *, backend: Optional[str] = None) -> Optional[EnginePlan]:
+def resolve_plan(cfg, *, backend: Optional[str] = None,
+                 mesh=None) -> Optional[EnginePlan]:
     """``EngineConfig`` (or None) -> resolved ``EnginePlan`` (or None).
 
     None / a fully-disabled config (``weight_bits == 0`` *and*
     ``kv_bits == 0``) resolve to None — the plain dense path.  A
     kv-only config (``weight_bits=0, kv_bits=8``) resolves to a live
     plan with ``bits=0`` (dense weights, int8 KV pages).  ``backend``
-    overrides the config's backend field.  Passing an already-resolved
-    plan returns it unchanged.
+    overrides the config's backend field.  ``mesh`` pins the production
+    mesh into the plan (the ``sharded`` backend needs one; resolution
+    is memoized per (config, backend, mesh) — ``jax.sharding.Mesh`` is
+    hashable).  Passing an already-resolved plan returns it unchanged.
     """
     if cfg is None:
         return None
     if isinstance(cfg, EnginePlan):
         return cfg
-    return _resolve_cached(cfg, backend)
+    return _resolve_cached(cfg, backend, mesh)
 
 
 def as_plan(eng) -> Optional[EnginePlan]:

@@ -31,6 +31,7 @@ import jax           # noqa: E402
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              engine_bits: int = 0, engine_radix: int = 1, kv_bits: int = 0,
              engine_backend: str = "reference",
+             engine_sharded: bool = False, psum_bits: int = 0,
              split_local: bool = False, paged: bool = False,
              remat: str = "block",
              microbatches: int = 1, grad_compress_bits: int = 0,
@@ -56,7 +57,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # the 512-host-device dry-run lowers on CPU: pin the exact jnp backend
     # (Pallas TPU kernels do not lower on the CPU backend)
     eng = EngineConfig(weight_bits=engine_bits, radix=engine_radix,
-                       kv_bits=kv_bits, backend=engine_backend)
+                       kv_bits=kv_bits, backend=engine_backend,
+                       sharded=engine_sharded, psum_bits=psum_bits)
     run = RunConfig(
         model=cfg,
         shape=shape,
@@ -118,6 +120,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "engine_radix": engine_radix,
         "kv_bits": kv_bits,
         "engine_backend": engine_backend if (engine_bits or kv_bits) else "",
+        "engine_sharded": engine_sharded,
+        "psum_bits": psum_bits,
         "split_local": split_local,
         "paged": paged,
         "remat": remat,
@@ -135,6 +139,10 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     name = f"{arch}__{shape_name}__{suffix}"
     if engine_bits:
         name += f"__eng{engine_bits}r{engine_radix}"
+    if engine_sharded:
+        name += "__sharded"
+        if psum_bits:
+            name += f"p{psum_bits}"
     if kv_bits:
         name += f"__kv{kv_bits}"
     if split_local:
@@ -167,6 +175,12 @@ def main():
                     help="int8 bit-planed KV cache/pages (0 = off)")
     ap.add_argument("--engine-backend", default="reference",
                     help="engine backend registry name (see repro.engine)")
+    ap.add_argument("--engine-sharded", action="store_true",
+                    help="wrap the backend in the mesh-native 'sharded' "
+                         "dispatch (shard_map over the model axis)")
+    ap.add_argument("--psum-bits", type=int, default=0,
+                    help="row-parallel partial-GEMV reduction: 0 = fp32 "
+                         "psum, 4/8 = compressed codes")
     ap.add_argument("--split-local", action="store_true")
     ap.add_argument("--paged", action="store_true",
                     help="lower the paged-KV block-table decode cell")
@@ -179,6 +193,7 @@ def main():
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              engine_bits=args.engine_bits, engine_radix=args.engine_radix,
              kv_bits=args.kv_bits, engine_backend=args.engine_backend,
+             engine_sharded=args.engine_sharded, psum_bits=args.psum_bits,
              split_local=args.split_local, paged=args.paged,
              remat=args.remat,
              microbatches=args.microbatches,

@@ -24,6 +24,7 @@ from repro.dist.sharding import (
     cache_shardings,
     opt_state_shardings,
     param_shardings,
+    pool_pages_for_mesh,
 )
 from repro.engine import resolve_plan
 from repro.models import decode_step, decode_step_paged, init_cache, init_params
@@ -87,7 +88,8 @@ def train_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
 
 def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     cfg, shape = run.model, run.shape
-    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    # resolved once per cell, mesh pinned (sharded backends shard_map it)
+    plan = resolve_plan(run.serve.engine, mesh=mesh)
     bits = plan.bits if plan else 0
     ap_sh = sharded_abstract_params(cfg, mesh, bits)
 
@@ -113,7 +115,8 @@ def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     serving layout): block-table gather instead of a per-slot cache
     rectangle, sized here at full capacity for the cell's batch."""
     cfg, shape = run.model, run.shape
-    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    # resolved once per cell, mesh pinned (sharded backends shard_map it)
+    plan = resolve_plan(run.serve.engine, mesh=mesh)
     bits = plan.bits if plan else 0
     ap_sh = sharded_abstract_params(cfg, mesh, bits)
 
@@ -121,14 +124,20 @@ def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     b = shape.global_batch
     page_size = run.serve.page_size
     n_blocks = pages_for(shape.seq_len, page_size)
-    n_pages = run.serve.n_pages or b * n_blocks + 1
+    # pad the pool so the physical page axis shards over the data axes
+    n_pages = pool_pages_for_mesh(
+        run.serve.n_pages or b * n_blocks + 1, mesh)
     apages = jax.eval_shape(functools.partial(
         init_kv_pages, cfg, n_pages, page_size, kv_bits=kv_bits))
     apages_sh = _attach(apages, cache_shardings(mesh, apages))
 
-    abt = jax.ShapeDtypeStruct((b, n_blocks), jnp.int32)
-    apos = jax.ShapeDtypeStruct((b,), jnp.int32)
-    aact = jax.ShapeDtypeStruct((b,), jnp.bool_)
+    # host-built index state: lane axis over the data axes
+    aidx = {
+        "block_tables": jax.ShapeDtypeStruct((b, n_blocks), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "active": jax.ShapeDtypeStruct((b,), jnp.bool_),
+    }
+    aidx_sh = _attach(aidx, batch_shardings(mesh, aidx))
     tok_shape = ((b, 1, cfg.n_codebooks) if cfg.family == "audio"
                  else (b, 1))
     atoks = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
@@ -139,7 +148,8 @@ def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
             params, pages, bt, pos, active, tokens, cfg, plan),
         donate_argnums=(1,),
     )
-    return fn, (ap_sh, apages_sh, abt, apos, aact, atoks_sh)
+    return fn, (ap_sh, apages_sh, aidx_sh["block_tables"],
+                aidx_sh["pos"], aidx_sh["active"], atoks_sh)
 
 
 def serve_cell(run: RunConfig, mesh, split_local: bool = False,
@@ -150,7 +160,8 @@ def serve_cell(run: RunConfig, mesh, split_local: bool = False,
     if paged:
         return paged_serve_cell(run, mesh)
     cfg, shape = run.model, run.shape
-    plan = resolve_plan(run.serve.engine)  # resolved once per cell
+    # resolved once per cell, mesh pinned (sharded backends shard_map it)
+    plan = resolve_plan(run.serve.engine, mesh=mesh)
     bits = plan.bits if plan else 0
     ap_sh = sharded_abstract_params(cfg, mesh, bits)
 

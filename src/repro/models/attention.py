@@ -15,6 +15,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.dist.hints import with_hint
+
 NEG_INF = -1e30
 FLASH_THRESHOLD = 4096  # switch to chunked path at/above this many KV tokens
 FLASH_BLOCK_Q = 512
@@ -306,7 +308,11 @@ def gather_kv_pages(pages: jnp.ndarray,
     """
     g = jnp.take(pages, block_tables, axis=0)      # (B, nblk, page, ...)
     b, nblk, page = g.shape[:3]
-    return g.reshape((b, nblk * page) + g.shape[3:])
+    out = g.reshape((b, nblk * page) + g.shape[3:])
+    # mesh-native serving: lanes over the data axes, KV heads over
+    # ``model`` — axis 2 is Hkv for K/V pools (B, T, Hkv, Dh) *and* for
+    # scale pools (B, T, Hkv), so one hint covers both.  No-op off-mesh.
+    return with_hint(out, ("pod", "data"), None, "model")
 
 
 @_scoped("attend_paged_decode")

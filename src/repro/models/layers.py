@@ -8,6 +8,11 @@ serving feature.  Engine dispatch is an :class:`~repro.engine.EnginePlan`
 (resolved once from :class:`EngineConfig` by the caller and threaded down);
 ``eng`` arguments still accept a raw ``EngineConfig`` for back-compat and
 are normalized through the memoized ``as_plan``.
+
+Mesh-native dispatch needs no extra threading here: a plan resolved with a
+mesh (``resolve_plan(cfg, mesh=...)`` + ``EngineConfig.sharded``) carries
+the mesh inside it, so the same ``dense(p, x, eng)`` call sites shard_map
+their GEMVs over the model axis (see ``docs/sharding.md``).
 """
 
 from __future__ import annotations

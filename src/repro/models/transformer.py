@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.config.base import EngineConfig, ModelConfig
 from repro.dist.hints import shard_batch_seq
+from repro.dist.sharding import _ROW as _ROW_PARALLEL
 from repro.engine import as_plan, pack_linear
 from repro.models.attention import (
     FLASH_THRESHOLD,
@@ -873,6 +874,9 @@ def decode_step_paged(
         )
     else:
         x = jnp.take(params["embed"], tokens, axis=0)
+    # lanes over the data axes (no-op off-mesh) — matches the pool's
+    # pages-over-data placement so scatters stay local to the lane's shard
+    x = shard_batch_seq(x)
     quant = pages.k_scale is not None
     pidx, poff = _scatter_targets(block_tables, pos, active,
                                   pages.page_size)
@@ -1028,21 +1032,27 @@ def prefill_chunk(
 
 _QUANT_KEYS = {"wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down",
                "in_proj", "out_proj", "lm_head"}
+# _ROW_PARALLEL (imported above from dist.sharding._ROW — one source of
+# truth): these consume model-sharded activations, so the sharded backend
+# must split their contraction axis to agree with the param placement.
 
 
 def quantize_params(params: Params, cfg: ModelConfig, bits: int = 8) -> Params:
     """Convert trained params into IMAGine-engine serving format: every
     large linear becomes a :class:`~repro.engine.PackedLinear` (bit-packed
     along the contraction axis, ``bits`` validated and frozen into the
-    pytree at pack time).  Embeddings, norms, convs, router stay dense."""
+    pytree at pack time, mesh partition preference derived from the name).
+    Embeddings, norms, convs, router stay dense."""
 
     def walk(node, name: str = ""):
         if isinstance(node, dict):
             out = {}
             for k, v in node.items():
                 if k in _QUANT_KEYS:
+                    part = "row" if k in _ROW_PARALLEL else "col"
                     if isinstance(v, dict) and "w" in v:  # {"w", "bias"?}
-                        out[k] = pack_linear(v["w"], bits, bias=v.get("bias"))
+                        out[k] = pack_linear(v["w"], bits, bias=v.get("bias"),
+                                             partition=part)
                     elif isinstance(v, jnp.ndarray) and v.ndim >= 2:
                         out[k] = pack_linear(v, bits)     # stacked experts
                     else:

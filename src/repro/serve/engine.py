@@ -25,6 +25,7 @@ same dispatch layer.
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import functools
 import time
@@ -35,6 +36,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import EngineConfig, ModelConfig, ServeConfig
+from repro.dist.hints import use_mesh
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    pool_pages_for_mesh,
+)
 from repro.engine import resolve_plan
 from repro.models import (
     decode_step,
@@ -92,6 +100,14 @@ class ServeEngine:
     pool to the full ``n_slots × max_len`` rectangle — no preemption;
     smaller pools trade preemptions for memory, admission is always
     capacity-checked).
+
+    ``mesh``: run on a production ``(data, model)`` mesh — params are
+    placed by ``dist.sharding.param_shardings`` (TP), the KV page pool by
+    ``cache_shardings`` (pages over ``data``, heads over ``model``; the
+    pool is padded so the page axis divides), and the plan is resolved
+    with the mesh so ``EngineConfig.sharded`` backends shard_map their
+    GEMVs.  The allocator, block tables and scheduler stay host-side
+    exactly as on one device.
     """
 
     def __init__(
@@ -107,16 +123,21 @@ class ServeEngine:
         page_size: Optional[int] = None,
         n_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        mesh=None,
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
+        self.mesh = mesh
         # the EngineConfig is resolved into an EnginePlan exactly once, at
         # construction; the plan is the only engine object the decode loop
-        # ever sees.
-        self.plan = resolve_plan(self.scfg.engine)
+        # ever sees.  The mesh rides in the plan, so the sharded backend
+        # needs no further plumbing.
+        self.plan = resolve_plan(self.scfg.engine, mesh=mesh)
         self.eng = self.plan  # back-compat alias
         if self.plan is not None and self.plan.bits:
             params = quantize_params(params, cfg, self.plan.bits)
+        if mesh is not None:
+            params = jax.device_put(params, param_shardings(mesh, params))
         self.params = params
         self.n_slots = n_slots
         self.max_len = max_len
@@ -149,11 +170,24 @@ class ServeEngine:
                 n_pages = self.scfg.n_pages
             if not n_pages:  # full rectangle + null page: never preempts
                 n_pages = n_slots * max_blocks + 1
+            # pages-over-data needs a divisible page axis; padding only
+            # grows spare capacity (the allocator sees more free pages)
+            n_pages = pool_pages_for_mesh(n_pages, mesh)
             self.pages = init_kv_pages(cfg, n_pages, self.page_size,
                                        kv_bits=self.kv_bits)
+            if mesh is not None:
+                self.pages = jax.device_put(
+                    self.pages, cache_shardings(mesh, self.pages))
             self.alloc = PageAllocator(n_pages, self.page_size, n_slots,
                                        max_len)
             self.sched = PagedScheduler(self.alloc, self.prefill_chunk)
+            # lane-state shardings are computed once: block tables and
+            # positions always enter the device under their mesh placement
+            self._table_shardings = None
+            if mesh is not None:
+                bt0, pos0 = self.alloc.device_tables()
+                sh = batch_shardings(mesh, {"bt": bt0, "pos": pos0})
+                self._table_shardings = (sh["bt"], sh["pos"])
 
             # the page pool is donated: each step scatters into it and the
             # old value is dropped, so XLA may update the buffers in place
@@ -177,6 +211,9 @@ class ServeEngine:
                     "(int8 KV pages); mode='slots' serves the "
                     "full-precision cache only")
             self.cache = init_cache(cfg, n_slots, max_len)
+            if mesh is not None:
+                self.cache = jax.device_put(
+                    self.cache, cache_shardings(mesh, self.cache))
             self.slot_req: List[Optional[Request]] = [None] * n_slots
 
             @jax.jit
@@ -215,9 +252,18 @@ class ServeEngine:
     def run(self) -> List[Request]:
         """Drive until queue + slots drain; returns completed requests."""
         self._run_t0 = time.perf_counter()
-        if self.mode == "paged":
-            return self._run_paged()
-        return self._run_slots()
+        # the mesh context makes the model-internal sharding hints live
+        # (they are no-ops off-mesh); device placement itself was pinned at
+        # construction via param/cache shardings.
+        with self._mesh_ctx():
+            if self.mode == "paged":
+                return self._run_paged()
+            return self._run_slots()
+
+    def _mesh_ctx(self):
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return use_mesh(self.mesh)
 
     @property
     def preemptions(self) -> int:
@@ -243,7 +289,7 @@ class ServeEngine:
         if batch is None:
             return
         tokens, pos0, seq_lens, lanes = batch
-        bt, _ = self.alloc.device_tables()
+        bt, _ = self.alloc.device_tables(self._table_shardings)
         logits, self.pages = self._prefill_paged(
             self.params, self.pages, bt, jnp.asarray(tokens),
             jnp.asarray(pos0), jnp.asarray(seq_lens))
@@ -280,9 +326,8 @@ class ServeEngine:
             req.output.append(tok)
             updates[slot] = tok
         tokens = self._lane_tokens(updates)
-        active = jnp.asarray(
-            [s in updates for s in range(self.n_slots)])
-        bt, pos = self.alloc.device_tables()
+        active = jnp.asarray(self.sched.lane_mask(updates))
+        bt, pos = self.alloc.device_tables(self._table_shardings)
         logits, self.pages = self._decode_paged(
             self.params, self.pages, bt, pos, active, tokens)
         lg = np.asarray(logits)

@@ -201,6 +201,17 @@ class PageAllocator:
         self.pos[slot] = 0
 
     # -------------------------------------------------------------- views
-    def device_tables(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """(block_tables, pos) as device arrays for the jitted steps."""
+    def device_tables(self, shardings=None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(block_tables, pos) as device arrays for the jitted steps.
+
+        ``shardings``: optional ``(bt_sharding, pos_sharding)`` pair (from
+        ``dist.sharding.batch_shardings`` — lane axis over the data axes).
+        The numpy tables go straight to their mesh placement in one
+        transfer — no default-device stop, no per-step reshard inside the
+        jitted decode/prefill calls.
+        """
+        if shardings is not None:
+            return (jax.device_put(self.block_tables, shardings[0]),
+                    jax.device_put(self.pos, shardings[1]))
         return jnp.asarray(self.block_tables), jnp.asarray(self.pos)

@@ -120,6 +120,18 @@ class PagedScheduler:
             and r.last_logits is not None
         ]
 
+    def lane_mask(self, slots) -> np.ndarray:
+        """(n_slots,) bool lane-activity mask for the jitted decode step.
+
+        The mask's batch axis is the one the mesh shards over ``data`` —
+        building it here keeps every lane-indexed array the scheduler
+        hands the device in one place.
+        """
+        mask = np.zeros((self.n_slots,), bool)
+        for s in slots:
+            mask[s] = True
+        return mask
+
     # -------------------------------------------------------- preemption
     def grant_decode_page(self, slot: int) -> bool:
         """Make room for slot's next decode token, preempting the

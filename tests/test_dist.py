@@ -3,6 +3,7 @@ numerics.  Multi-device tests run in a subprocess with 8 forced host
 devices so this process's single-device view is untouched."""
 
 import functools
+import os
 import subprocess
 import sys
 import textwrap
@@ -14,7 +15,13 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config.base import MeshConfig
 from repro.dist import make_mesh, use_mesh
-from repro.dist.sharding import batch_shardings, param_spec, param_shardings
+from repro.dist.sharding import (
+    batch_shardings,
+    cache_shardings,
+    param_spec,
+    param_shardings,
+    pool_pages_for_mesh,
+)
 from repro.launch.steps import abstract_params
 
 from conftest import reduced_f32
@@ -30,8 +37,9 @@ def _run_sub(code: str):
         import jax, jax.numpy as jnp
         import numpy as np
     """)
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     out = subprocess.run([sys.executable, "-c", pre + textwrap.dedent(code)],
-                         capture_output=True, text=True, cwd="/root/repo",
+                         capture_output=True, text=True, cwd=repo,
                          timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     return out.stdout
@@ -93,6 +101,54 @@ class TestParamSpecs:
         ab = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32)}
         sh = batch_shardings(mesh, ab)
         assert sh["tokens"].spec == P(("data",), None)
+
+
+class TestKVPagesSpecs:
+    """The paged-serving pytree through the KV-cache rules: pools shard
+    pages-over-data and heads-over-model, scale pools follow their K/V
+    pool's head sharding, block tables / pos / active shard the lane axis
+    over data only (satellite of the mesh-native refactor)."""
+
+    def _mesh(self):
+        return make_mesh((1, 1), ("data", "model"))
+
+    def test_pool_and_scale_specs(self):
+        from repro.serve.pages import init_kv_pages
+
+        cfg = reduced_f32("qwen2.5-3b")
+        pages = jax.eval_shape(
+            lambda: init_kv_pages(cfg, 8, 4, kv_bits=8))
+        sh = cache_shardings(self._mesh(), pages)
+        # (L, P, page, Hkv, Dh): pages over data, KV heads over model
+        assert sh.k.spec == P(None, ("data",), None, "model", None)
+        assert sh.v.spec == sh.k.spec
+        # (L, P, page, Hkv): the scale pool's trailing head axis must
+        # match its K/V pool (an unsharded scale would desync dequant)
+        assert sh.k_scale.spec == P(None, ("data",), None, "model")
+        assert sh.v_scale.spec == sh.k_scale.spec
+
+    def test_page_state_specs(self):
+        state = {
+            "block_tables": jax.ShapeDtypeStruct((4, 8), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((4,), jnp.int32),
+            "active": jax.ShapeDtypeStruct((4,), jnp.bool_),
+        }
+        sh = cache_shardings(self._mesh(), state)
+        assert sh["block_tables"].spec == P(("data",), None)
+        assert sh["pos"].spec == P(("data",))
+        assert sh["active"].spec == P(("data",))
+
+    def test_pool_padding_for_mesh(self):
+        mesh = make_mesh((1, 1), ("data", "model"))
+        assert pool_pages_for_mesh(9, mesh) == 9  # data product 1: no pad
+        assert pool_pages_for_mesh(9, None) == 9
+
+        class FakeMesh:
+            axis_names = ("data", "model")
+            shape = {"data": 4, "model": 2}
+
+        assert pool_pages_for_mesh(9, FakeMesh()) == 12
+        assert pool_pages_for_mesh(12, FakeMesh()) == 12
 
 
 class TestMultiDevice:
@@ -159,6 +215,48 @@ class TestMultiDevice:
         err = float(jnp.max(jnp.abs(a - b))) / scale
         assert err < 0.05, err
         print("compressed psum rel err", err)
+        """)
+
+    def test_compressed_psum_bits4_exactness_bound(self):
+        """bits=4: pin the docstring's bound — every participant rounds by
+        at most scale/2 with the shared scale = pmax(absmax)/qmax, qmax =
+        2^(4-1)-1 = 7, so |comp - plain| <= n_dev * scale / 2.  And on an
+        integer grid whose absmax is exactly qmax the scale is 1.0 and the
+        4-bit wire is lossless."""
+        _run_sub("""
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.dist.collectives import compressed_psum_leaf
+        from jax.experimental.shard_map import shard_map
+
+        mesh = jax.make_mesh((8,), ("pod",))
+
+        def pair(x, bits):
+            @partial(shard_map, mesh=mesh, in_specs=P("pod"),
+                     out_specs=P("pod"))
+            def plain(v):
+                return jax.lax.psum(v, "pod")
+
+            @partial(shard_map, mesh=mesh, in_specs=P("pod"),
+                     out_specs=P("pod"))
+            def comp(v):
+                return compressed_psum_leaf(v, "pod", bits=bits)
+
+            return plain(x), comp(x)
+
+        g = jax.random.normal(jax.random.PRNGKey(1), (8, 64))
+        a, b = pair(g, 4)
+        absmax = float(jnp.max(jnp.abs(g)))      # pmax of shard maxes
+        bound = 8 * (absmax / 7.0) / 2.0
+        err = float(jnp.max(jnp.abs(a - b)))
+        assert err <= bound * 1.0001, (err, bound)
+        print("bits=4 err", err, "<= bound", bound)
+
+        gi = np.random.default_rng(0).integers(-7, 8, (8, 32))
+        gi = jnp.asarray(gi.astype(np.float32)).at[0, 0].set(7.0)
+        a2, b2 = pair(gi, 4)
+        np.testing.assert_array_equal(np.asarray(a2), np.asarray(b2))
+        print("bits=4 integer grid lossless")
         """)
 
     def test_serve_step_sharded_decode(self):
