@@ -1,6 +1,7 @@
 """Kernel micro-benchmarks (CPU interpret mode for wall time; the derived
 column reports the roofline-relevant quantities: bytes/weight, digit passes,
-arithmetic intensity on the TPU target)."""
+arithmetic intensity on the TPU target — and, for the paged-attention
+family, modeled bytes per decode token)."""
 
 import time
 
@@ -11,6 +12,9 @@ import numpy as np
 from repro.engine import EnginePlan, pack_linear
 from repro.kernels.bitplane_gemv.ref import bitplane_gemv_ref
 from repro.kernels.int8_matvec.ops import int8_matvec
+from repro.kernels.paged_attention.ops import (decode_attn_bytes,
+                                               synthetic_paged_case)
+from repro.models.attention import attend_paged_decode
 
 
 def _time(fn, *args, reps=3, **kw):
@@ -57,4 +61,30 @@ def run():
     us = _time(int8_matvec, ql8.packed, ql8.scale, x)
     rows.append(("kernels.int8_matvec.baseline", round(us, 1),
                  "bit-parallel comparison point"))
+
+    # paged-attention family: fused in-place read vs the gather reference,
+    # derived column = modeled HBM bytes per decode token.  Same synthetic
+    # inputs as benchmarks/attn_bench.py via the shared fixture.
+    batch, hkv, group, dh, page, nblk = 4, 4, 2, 64, 8, 16
+    hq = hkv * group
+    for kv_bits in (0, 8):
+        case = synthetic_paged_case(rng, batch=batch, nblk=nblk, page=page,
+                                    hkv=hkv, group=group, dh=dh,
+                                    kv_bits=kv_bits)
+        q, kp, vp = case["q"], case["k_pages"], case["v_pages"]
+        ks, vs, bt = case["k_scale"], case["v_scale"], case["block_tables"]
+        pos = jnp.full((batch,), nblk * page - 2, jnp.int32)
+        for backend in ("gather", "pallas_interpret"):
+            fn = jax.jit(lambda q, kp, vp, bt, pos, _b=backend:
+                         attend_paged_decode(q, kp, vp, bt, pos, 0,
+                                             k_scale=ks, v_scale=vs,
+                                             attn_backend=_b))
+            us = _time(fn, q, kp, vp, bt, pos)
+            bpt = decode_attn_bytes(
+                backend, batch=batch, context=nblk * page, n_kv_heads=hkv,
+                head_dim=dh, n_q_heads=hq, page_size=page,
+                kv_bits=kv_bits) // batch
+            tag = "fused" if backend.startswith("pallas") else "gather"
+            rows.append((f"kernels.paged_attention.{tag}.kv{kv_bits}",
+                         round(us, 1), f"bytes/tok={bpt}"))
     return rows

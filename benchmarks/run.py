@@ -11,6 +11,7 @@ import sys
 
 def main() -> None:
     from benchmarks import (
+        attn_bench,
         engine_model,
         fig4_scaling,
         fig6_latency,
@@ -32,6 +33,7 @@ def main() -> None:
         "engine": engine_model.run,
         "roofline": roofline_summary.run,
         "serve": serve_bench.run,
+        "attn": attn_bench.run,
     }
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

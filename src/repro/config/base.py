@@ -262,8 +262,13 @@ class EngineConfig:
         ``jax.default_backend()``: the compiled Pallas kernel on TPU, the
         exact jnp reference elsewhere).  Resolved once, by
         ``repro.engine.resolve_plan``, into an ``EnginePlan``.
+    ``attn_backend``: paged decode-attention read path — "auto" (TPU →
+        the fused in-place kernel, else the gather reference), "gather",
+        "pallas_interpret" or "pallas_tpu".  Resolved into the plan like
+        ``backend``.
     ``use_pallas``: DEPRECATED legacy knob, honoured only when ``backend``
-        is "auto" (False pins the "reference" backend).
+        is "auto" (False pins the "reference" backend); resolution emits a
+        ``DeprecationWarning`` whenever it actually changes the plan.
     ``sharded``: wrap ``backend`` in the mesh-native ``sharded`` dispatch
         (shard_map over the mesh's model axis; the mesh itself is supplied
         at plan resolution — ``resolve_plan(cfg, mesh=...)``).
@@ -276,6 +281,7 @@ class EngineConfig:
     kv_bits: int = 0             # beyond-paper: bit-plane the KV cache too
     act_dtype: str = "bfloat16"
     backend: str = "auto"        # engine backend name (see repro.engine)
+    attn_backend: str = "auto"   # paged decode-attention read path
     use_pallas: bool = True      # DEPRECATED: pre-EnginePlan dispatch knob
     tile_m: int = 256            # engine tile rows   (PE columns per tile)
     tile_k: int = 512            # engine tile depth  (weights streamed E->W)
@@ -294,6 +300,9 @@ class EngineConfig:
         if not isinstance(self.backend, str) or not self.backend:
             raise ValueError(f"backend must be a backend name, got "
                              f"{self.backend!r}")
+        if not isinstance(self.attn_backend, str) or not self.attn_backend:
+            raise ValueError(f"attn_backend must be a backend name, got "
+                             f"{self.attn_backend!r}")
         # backend names are validated against the live registry when the
         # config is resolved into a plan (repro.engine.resolve_plan).
 

@@ -25,11 +25,14 @@ package.
 """
 
 from repro.engine.backends import (
+    ATTN_BACKENDS,
     available_backends,
+    default_attn_backend,
     default_backend,
     default_interpret,
     get_backend,
     register_backend,
+    resolve_attn_backend,
     resolve_backend_name,
 )
 from repro.engine.packed import (
@@ -54,12 +57,14 @@ from repro.engine.plan import (
 import repro.engine.sharded  # noqa: E402,F401  isort:skip
 
 __all__ = [
+    "ATTN_BACKENDS",
     "EnginePlan",
     "PackedLinear",
     "as_packed",
     "as_param_dict",
     "as_plan",
     "available_backends",
+    "default_attn_backend",
     "default_backend",
     "default_interpret",
     "get_backend",
@@ -68,6 +73,7 @@ __all__ = [
     "partition_kind",
     "plan_for_bits",
     "register_backend",
+    "resolve_attn_backend",
     "resolve_backend_name",
     "resolve_plan",
     "validate_bits",

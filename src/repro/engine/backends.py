@@ -79,6 +79,45 @@ def resolve_backend_name(name: str = AUTO) -> str:
     return resolved
 
 
+# ---------------------------------------------------------------------------
+# paged-attention backends (the decode-attention read path)
+# ---------------------------------------------------------------------------
+
+# ``gather`` is the reference read path (materialize the logical KV view,
+# then attend); the pallas names run the fused in-place kernel
+# (repro.kernels.paged_attention) that reads pool pages through the block
+# table.  Same naming scheme as the GEMV backends so one mental model
+# covers both dispatch axes of the plan.
+ATTN_BACKENDS = ("gather", "pallas_interpret", "pallas_tpu")
+
+
+def default_attn_backend() -> str:
+    """Auto-selection for ``EnginePlan.attn_backend``: the compiled fused
+    kernel on TPU hosts, the exact gather path everywhere else (interpret
+    mode is a validation tool, not a CPU fast path)."""
+    return "pallas_tpu" if jax.default_backend() == "tpu" else "gather"
+
+
+def resolve_attn_backend(name: str = AUTO, *, mesh=None) -> str:
+    """Resolve an attention-backend name; ``auto`` consults the host.
+
+    ``mesh``: when a production mesh is pinned, ``auto`` resolves to
+    ``gather`` even on TPU — the fused kernel is not shard_mapped over the
+    pool's pages-over-data / heads-over-model placement yet (ROADMAP open
+    item), and the gather path carries the sharding hints.  An *explicit*
+    pallas name is honored as the caller's opt-in.
+    """
+    if name in (AUTO, None, ""):
+        resolved = "gather" if mesh is not None else default_attn_backend()
+    else:
+        resolved = name
+    if resolved not in ATTN_BACKENDS:
+        raise KeyError(
+            f"unknown attention backend {resolved!r}; available: "
+            f"{sorted(ATTN_BACKENDS)}")
+    return resolved
+
+
 def default_interpret() -> bool:
     """Should Pallas kernel bodies run in interpret mode on this host?
 

@@ -17,11 +17,16 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax.numpy as jnp
 
-from repro.engine.backends import get_backend, resolve_backend_name
+from repro.engine.backends import (
+    get_backend,
+    resolve_attn_backend,
+    resolve_backend_name,
+)
 from repro.engine.packed import PackedLinear, as_packed, validate_bits
 
 
@@ -38,6 +43,13 @@ class EnginePlan:
     ``radix``: weight bits retired per bit-serial pass (1 = IMAGine radix-2
         baseline, 2 = slice4/Booth-radix-4, 4 = nibble pass).
     ``kv_bits``: beyond-paper bit-planed KV cache (0 = off, 8 = int8).
+    ``attn_backend``: paged decode-attention read path — ``gather``
+        (materialize the logical KV view, the reference) or the fused
+        in-place kernel (``pallas_interpret`` / ``pallas_tpu``); ``auto``
+        resolves like the GEMV backend (TPU → ``pallas_tpu``, else
+        ``gather``), except that a mesh-carrying plan resolves ``auto``
+        to ``gather`` — the kernel is not shard_mapped over the sharded
+        pool yet.  Stored concrete, never ``"auto"``.
     ``out_dtype``: None means "match the activation dtype".
     ``block_*``: Pallas kernel tile sizes (batch, PE-column, K-stream).
 
@@ -55,6 +67,7 @@ class EnginePlan:
     bits: int
     radix: int = 1
     kv_bits: int = 0
+    attn_backend: str = "auto"
     out_dtype: Any = None
     block_b: int = 128
     block_n: int = 256
@@ -81,6 +94,9 @@ class EnginePlan:
         # resolution, not in the middle of a jitted decode step.
         object.__setattr__(
             self, "backend", resolve_backend_name(self.backend))
+        object.__setattr__(
+            self, "attn_backend",
+            resolve_attn_backend(self.attn_backend, mesh=self.mesh))
         if self.backend == "sharded":
             inner = resolve_backend_name(self.inner_backend)
             if inner == "sharded":
@@ -140,6 +156,14 @@ def _resolve_cached(cfg, backend: Optional[str], mesh) -> Optional[EnginePlan]:
     name = backend or getattr(cfg, "backend", "auto") or "auto"
     if name == "auto" and not getattr(cfg, "use_pallas", True):
         # legacy knob: use_pallas=False meant "exact jnp path, please".
+        # Warn only when the knob actually influences resolution (here),
+        # not on every config carrying the default — the shim is slated
+        # for deletion at the next re-anchor.
+        warnings.warn(
+            "EngineConfig.use_pallas is deprecated and scheduled for "
+            "removal; say EngineConfig(backend='reference') instead of "
+            "use_pallas=False",
+            DeprecationWarning, stacklevel=3)
         name = "reference"
     inner = None
     if getattr(cfg, "sharded", False) and name != "sharded":
@@ -152,6 +176,7 @@ def _resolve_cached(cfg, backend: Optional[str], mesh) -> Optional[EnginePlan]:
         bits=cfg.weight_bits,
         radix=cfg.radix,
         kv_bits=cfg.kv_bits,
+        attn_backend=getattr(cfg, "attn_backend", "auto") or "auto",
         block_n=cfg.tile_m,
         block_k=cfg.tile_k,
         mesh=mesh,

@@ -1,0 +1,14 @@
+"""Fused paged-attention decode kernel: K/V read in place from the page
+pool through the block table (no gathered logical-view copy)."""
+
+from repro.kernels.paged_attention.ops import (
+    decode_attn_bytes,
+    paged_attention,
+)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = [
+    "decode_attn_bytes",
+    "paged_attention",
+    "paged_attention_ref",
+]

@@ -1,0 +1,199 @@
+"""Paged decode-attention Pallas kernel: read KV pages *in place*.
+
+The gather-then-attend read path (``models.attention.gather_kv_pages`` +
+``attend_decode``) materializes every lane's full logical KV view —
+``(B, n_blocks·page, Hkv, Dh)`` per layer, ×2 for K/V, ×2 again for the
+scale pools on the int8 path — before a single score is computed, so HBM
+traffic per decode token is ~3× the logical view (pool read + view write +
+view read).  This kernel is the compute-in-place fix, the serving-side twin
+of the paper's GEMV-at-BRAM-speed argument: the **block table drives the
+K/V BlockSpec index maps** (scalar-prefetched, so the page id is known
+before the DMA is issued), pages stream VMEM-ward exactly once per
+(lane, kv head), and scores / running softmax statistics / the output
+accumulator never leave VMEM.
+
+Structure (same online-softmax pattern as ``kernels.flash_attention``):
+
+* grid ``(B, Hkv, n_blocks)`` with the block-table walk innermost; the
+  output block is revisited across that sweep and the (m, l) running
+  statistics live in VMEM scratch.
+* GQA rides in the Q layout: queries arrive as ``(B, Hkv, G, Dh)`` so one
+  grid step attends all ``G = Hq // Hkv`` query heads of its KV head
+  against one page — the K/V block is ``(1, page, 1, Dh)`` of the pool,
+  indexed ``(block_tables[b, i], 0, h, 0)``.
+* causal + sliding-window bounds are computed from the block index and the
+  scalar-prefetched ``cur_pos`` / ``window`` — no mask tensors exist
+  anywhere, and ``window`` stays a *runtime* scalar so one compiled kernel
+  serves every layer of a local/global stack under ``lax.scan``.
+* ``kv_bits=8`` pools dequantize in VMEM by folding the scale pools into
+  the probabilities (``scores·s_k[t]``, ``p·s_v[t]`` — the same math as
+  ``attend_decode_quant``), so the pool bytes stay 1 byte/element all the
+  way to the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _body(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+          ks_ref, vs_ref, o_ref, m_ref, l_ref, *,
+          scale: float, page: int, n_blocks: int, quant: bool):
+    """One (lane, kv-head, logical-block) step of the online softmax.
+
+    ``ks_ref`` / ``vs_ref`` are the scale-pool blocks (None when the pool
+    is full precision).  ``o_ref`` is revisited across the innermost grid
+    dimension (the block-table walk); the running (m, l) statistics live
+    in VMEM scratch and never touch HBM."""
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    if quant:
+        # int8 page → bf16 is exact (|q| <= 127 fits the 8-bit mantissa);
+        # mirrors attend_decode_quant so kv_bits=8 stays one dispatch
+        q = q_ref[0, 0].astype(jnp.bfloat16).astype(jnp.float32)   # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.bfloat16).astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        # mirror the gather path's storage-dtype rounding (attend_decode
+        # casts q to the cache dtype before the contraction): exact
+        # identity for f32 pools, same-ulp agreement for bf16 pools
+        q = q_ref[0, 0].astype(k_ref.dtype).astype(jnp.float32)    # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)                  # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if quant:
+        s = s * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
+
+    # causal + sliding-window bounds from the block index: logical position
+    # of pool row t in this block is i*page + t
+    kv_pos = i * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    cur = pos_ref[b]
+    win = win_ref[0]
+    mask = kv_pos <= cur
+    mask = jnp.logical_and(
+        mask, jnp.where(win > 0, kv_pos > cur - win, True))
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[0]                                               # (G,)
+    l_old = l_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])                                # (G, page)
+    l_new = l_old * corr + jnp.sum(p, axis=-1)
+    if quant:
+        p = p * vs_ref[0, :, 0].astype(jnp.float32)[None, :]
+    else:
+        # p·v in the pool's storage dtype, as attend_decode (and the
+        # pure-jnp attend_flash) cast the probabilities before the dot
+        p = p.astype(v_ref.dtype).astype(jnp.float32)
+    o_new = o_ref[0, 0] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(i == n_blocks - 1)
+    def _final():
+        o_ref[0, 0] = o_new / jnp.maximum(l_new, 1e-30)[:, None]
+
+    @pl.when(i < n_blocks - 1)
+    def _accum():
+        o_ref[0, 0] = o_new
+
+
+def _kernel_quant(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+                  ks_ref, vs_ref, o_ref, m_ref, l_ref, **kw):
+    _body(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+          ks_ref, vs_ref, o_ref, m_ref, l_ref, quant=True, **kw)
+
+
+def _kernel_full(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+                 o_ref, m_ref, l_ref, **kw):
+    _body(bt_ref, pos_ref, win_ref, q_ref, k_ref, v_ref,
+          None, None, o_ref, m_ref, l_ref, quant=False, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_pallas(
+    q: jnp.ndarray,            # (B, Hkv, G, Dh) — grouped query layout
+    k_pages: jnp.ndarray,      # (P, page, Hkv, Dh) — one layer's pool
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    cur_pos: jnp.ndarray,      # (B,) int32 position of the newest token
+    window: jnp.ndarray,       # (1,) int32 (runtime scalar; <= 0 = full)
+    k_scale=None,              # (P, page, Hkv) — int8 pools only
+    v_scale=None,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused paged decode attention; returns ``(B, Hkv, G, Dh)`` float32.
+
+    The block table and the masking scalars travel as scalar-prefetch
+    operands (``pltpu.PrefetchScalarGridSpec``): index maps see them before
+    the grid step's DMAs are issued, which is what lets the K/V BlockSpecs
+    address pool pages directly — the gathered copy never exists.
+    """
+    b, hkv, g, d = q.shape
+    page = k_pages.shape[1]
+    n_blocks = block_tables.shape[1]
+    scale = d ** -0.5
+    quant = k_scale is not None
+
+    def _at_page(bb, h, i, bt, pos, win):
+        return (bt[bb, i], 0, h, 0)
+
+    def _at_scale(bb, h, i, bt, pos, win):
+        return (bt[bb, i], 0, h)
+
+    def _at_q(bb, h, i, bt, pos, win):
+        return (bb, h, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), _at_q),
+        pl.BlockSpec((1, page, 1, d), _at_page),
+        pl.BlockSpec((1, page, 1, d), _at_page),
+    ]
+    operands = [q, k_pages, v_pages]
+    kernel = _kernel_full
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _at_scale),
+                     pl.BlockSpec((1, page, 1), _at_scale)]
+        operands += [k_scale, v_scale]
+        kernel = _kernel_quant
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hkv, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, g, d), _at_q),
+        # running (max, sumexp) stay in VMEM across the block-table walk —
+        # they are softmax bookkeeping, not results, and never touch HBM
+        scratch_shapes=[
+            pltpu.VMEM((1, g), jnp.float32),
+            pltpu.VMEM((1, g), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, scale=scale, page=page,
+                          n_blocks=n_blocks),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), cur_pos.astype(jnp.int32),
+      window, *operands)

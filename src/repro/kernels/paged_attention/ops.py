@@ -1,0 +1,133 @@
+"""Public wrapper for the fused paged-attention decode kernel.
+
+Accepts the model's decode layout (``q`` as ``(B, 1, Hq, Dh)``, pools as
+``(P, page, Hkv, Dh)``) plus an *attention backend name* — models/, serve/
+and benchmarks/ never decide interpret booleans themselves (the EnginePlan
+hygiene rule); the name → interpret mapping lives here, next to the kernel.
+
+Also home of :func:`decode_attn_bytes`, the bytes-moved model the attention
+benchmarks and the micro-bench derived columns share: the fused kernel
+reads each pool page exactly once per (lane, kv head) while the gather
+backend pays pool-read + view-write + view-read for the same logical view.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention_pallas
+
+
+def paged_attention(
+    q: jnp.ndarray,            # (B, 1, Hq, Dh) — model decode layout
+    k_pages: jnp.ndarray,      # (P, page, Hkv, Dh)
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    cur_pos: jnp.ndarray,      # (B,)
+    window=0,                  # python int or traced scalar; <= 0 = full
+    k_scale: Optional[jnp.ndarray] = None,  # (P, page, Hkv) int8 pools only
+    v_scale: Optional[jnp.ndarray] = None,
+    *,
+    attn_backend: str = "pallas_interpret",
+) -> jnp.ndarray:
+    """Fused in-place paged decode attention; returns ``(B, 1, Hq, Dh)``.
+
+    ``attn_backend`` must be one of the kernel-backed names
+    (``pallas_interpret`` / ``pallas_tpu``); the ``gather`` reference path
+    lives in ``repro.models.attention.attend_paged_decode``.
+    """
+    if attn_backend not in ("pallas_interpret", "pallas_tpu"):
+        raise ValueError(
+            f"paged_attention runs the fused kernel only "
+            f"(pallas_interpret/pallas_tpu); got {attn_backend!r}")
+    b, _, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = paged_attention_pallas(
+        qg, k_pages, v_pages, block_tables, cur_pos, win,
+        k_scale, v_scale,
+        interpret=(attn_backend == "pallas_interpret"))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def synthetic_paged_case(rng, *, batch: int, nblk: int, page: int,
+                         hkv: int, group: int, dh: int, kv_bits: int):
+    """One synthetic (q, pools, block tables) decode case — the shared
+    fixture of ``benchmarks/attn_bench.py`` and the paged rows of
+    ``benchmarks/kernel_bench.py``, so both benches measure identical
+    inputs.  ``rng``: a ``numpy.random.Generator``.  Returns a dict with
+    ``q / k_pages / v_pages / k_scale / v_scale / block_tables``
+    (scales None unless ``kv_bits``); block tables are a permutation of
+    ``batch * nblk`` distinct non-null pages."""
+    import numpy as np
+
+    n_pages = batch * nblk + 1
+    if kv_bits:
+        kp = jnp.asarray(rng.integers(-127, 128, (n_pages, page, hkv, dh)),
+                         jnp.int8)
+        vp = jnp.asarray(rng.integers(-127, 128, (n_pages, page, hkv, dh)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.uniform(0.004, 0.02, (n_pages, page, hkv)),
+                         jnp.bfloat16)
+        vs = jnp.asarray(rng.uniform(0.004, 0.02, (n_pages, page, hkv)),
+                         jnp.bfloat16)
+    else:
+        kp = jnp.asarray(rng.standard_normal((n_pages, page, hkv, dh))
+                         .astype(np.float32))
+        vp = jnp.asarray(rng.standard_normal((n_pages, page, hkv, dh))
+                         .astype(np.float32))
+        ks = vs = None
+    return {
+        "q": jnp.asarray(rng.standard_normal((batch, 1, hkv * group, dh))
+                         .astype(np.float32)),
+        "k_pages": kp,
+        "v_pages": vp,
+        "k_scale": ks,
+        "v_scale": vs,
+        "block_tables": jnp.asarray(
+            1 + rng.permutation(batch * nblk).reshape(batch, nblk),
+            jnp.int32),
+    }
+
+
+def decode_attn_bytes(
+    backend: str,
+    *,
+    batch: int,
+    context: int,
+    n_kv_heads: int,
+    head_dim: int,
+    n_q_heads: int,
+    page_size: int,
+    kv_bits: int = 0,
+    act_itemsize: int = 4,
+) -> int:
+    """Modeled HBM bytes moved by ONE layer's decode-attention read path.
+
+    ``gather`` (the reference backend) materializes the logical KV view
+    before attending — per K and per V it pays pool read + view write +
+    view read (3× the view), and the int8 path pays the same 3× for each
+    scale pool.  The fused kernel (``pallas_interpret`` / ``pallas_tpu``)
+    reads each mapped page exactly once per (lane, kv head) and never
+    writes an intermediate: 1× the view (+ 1× scales), plus the block
+    table itself.  Q read and O write are identical on both paths and
+    included for honest totals.
+    """
+    import math
+
+    kv_isz = 1 if kv_bits else act_itemsize
+    n_blocks = max(1, math.ceil(context / page_size))
+    view = batch * n_blocks * page_size * n_kv_heads * head_dim * kv_isz
+    scale_view = (batch * n_blocks * page_size * n_kv_heads * 2
+                  if kv_bits else 0)  # bf16 scales
+    qo = 2 * batch * n_q_heads * head_dim * act_itemsize  # Q read + O write
+    tables = batch * n_blocks * 4                         # int32 block table
+    if backend == "gather":
+        return 2 * 3 * view + 2 * 3 * scale_view + qo + tables
+    if backend in ("pallas_interpret", "pallas_tpu"):
+        return 2 * view + 2 * scale_view + qo + tables
+    raise ValueError(f"unknown attention backend {backend!r}")

@@ -1,0 +1,64 @@
+"""Gather-then-attend reference for the fused paged-attention kernel.
+
+Standalone jnp twin of ``models.attention.attend_paged_decode``'s
+``gather`` path (kept import-free of ``repro.models`` so kernel tests and
+benches can diff the two without circular imports).  This is exactly the
+traffic pattern the kernel exists to kill: ``jnp.take`` materializes the
+``(B, n_blocks·page, Hkv, Dh)`` logical view per K/V (and per scale pool
+on the int8 path) before a single score is computed.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gather(pages: jnp.ndarray, block_tables: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.take(pages, block_tables, axis=0)       # (B, nblk, page, ...)
+    b, nblk, page = g.shape[:3]
+    return g.reshape((b, nblk * page) + g.shape[3:])
+
+
+def paged_attention_ref(
+    q: jnp.ndarray,            # (B, 1, Hq, Dh)
+    k_pages: jnp.ndarray,      # (P, page, Hkv, Dh)
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    cur_pos: jnp.ndarray,      # (B,)
+    window=0,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    b, _, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    kg = _gather(k_pages, block_tables)             # (B, T, Hkv, Dh)
+    vg = _gather(v_pages, block_tables)
+    t = kg.shape[1]
+    quant = k_scale is not None
+    acc_in = jnp.bfloat16 if quant else kg.dtype
+    qg = q.reshape(b, hkv, g, d).astype(acc_in)
+    sc = jnp.einsum("bhgd,bkhd->bhgk", qg, kg.astype(acc_in),
+                    preferred_element_type=jnp.float32) * scale
+    if quant:
+        ksg = _gather(k_scale, block_tables)        # (B, T, Hkv)
+        sc = sc * ksg.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    kv_pos = jnp.arange(t)[None, :]
+    valid = kv_pos <= cur_pos[:, None]
+    near = kv_pos > cur_pos[:, None] - window
+    valid = jnp.logical_and(valid, jnp.where(window > 0, near, True))
+    sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if quant:
+        vsg = _gather(v_scale, block_tables)
+        p = p * vsg.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(acc_in),
+                     vg.astype(acc_in),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, hq, d).astype(q.dtype)

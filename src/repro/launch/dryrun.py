@@ -31,6 +31,7 @@ import jax           # noqa: E402
 def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              engine_bits: int = 0, engine_radix: int = 1, kv_bits: int = 0,
              engine_backend: str = "reference",
+             attn_backend: str = "auto",
              engine_sharded: bool = False, psum_bits: int = 0,
              split_local: bool = False, paged: bool = False,
              remat: str = "block",
@@ -58,6 +59,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     # (Pallas TPU kernels do not lower on the CPU backend)
     eng = EngineConfig(weight_bits=engine_bits, radix=engine_radix,
                        kv_bits=kv_bits, backend=engine_backend,
+                       attn_backend=attn_backend,
                        sharded=engine_sharded, psum_bits=psum_bits)
     run = RunConfig(
         model=cfg,
@@ -120,6 +122,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "engine_radix": engine_radix,
         "kv_bits": kv_bits,
         "engine_backend": engine_backend if (engine_bits or kv_bits) else "",
+        "attn_backend": attn_backend if paged else "",
         "engine_sharded": engine_sharded,
         "psum_bits": psum_bits,
         "split_local": split_local,
@@ -149,6 +152,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         name += "__splitlocal"
     if paged:
         name += "__paged"
+        if attn_backend != "auto":
+            name += f"__attn-{attn_backend}"
     if tag:
         name += f"__{tag}"
     path = os.path.join(out_dir, name + ".json")
@@ -175,6 +180,9 @@ def main():
                     help="int8 bit-planed KV cache/pages (0 = off)")
     ap.add_argument("--engine-backend", default="reference",
                     help="engine backend registry name (see repro.engine)")
+    ap.add_argument("--attn-backend", default="auto",
+                    help="paged decode-attention read path: auto | gather "
+                         "| pallas_interpret | pallas_tpu")
     ap.add_argument("--engine-sharded", action="store_true",
                     help="wrap the backend in the mesh-native 'sharded' "
                          "dispatch (shard_map over the model axis)")
@@ -193,6 +201,7 @@ def main():
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
              engine_bits=args.engine_bits, engine_radix=args.engine_radix,
              kv_bits=args.kv_bits, engine_backend=args.engine_backend,
+             attn_backend=args.attn_backend,
              engine_sharded=args.engine_sharded, psum_bits=args.psum_bits,
              split_local=args.split_local, paged=args.paged,
              remat=args.remat,

@@ -26,7 +26,7 @@ from repro.dist.sharding import (
     param_shardings,
     pool_pages_for_mesh,
 )
-from repro.engine import resolve_plan
+from repro.engine import resolve_attn_backend, resolve_plan
 from repro.models import decode_step, decode_step_paged, init_cache, init_params
 from repro.models.transformer import prefill, quantize_params
 from repro.serve.pages import init_kv_pages, pages_for
@@ -143,9 +143,16 @@ def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
     atoks = {"tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32)}
     atoks_sh = _attach(atoks, batch_shardings(mesh, atoks))["tokens"]
 
+    # when the engine itself is disabled the plan is None, but the config
+    # still names a decode-attention read path (gather vs fused kernel);
+    # resolved eagerly (typos fail here, "auto" on a mesh stays gather)
+    abk = (plan.attn_backend if plan
+           else resolve_attn_backend(
+               getattr(run.serve.engine, "attn_backend", None), mesh=mesh))
     fn = jax.jit(
         lambda params, pages, bt, pos, active, tokens: decode_step_paged(
-            params, pages, bt, pos, active, tokens, cfg, plan),
+            params, pages, bt, pos, active, tokens, cfg, plan,
+            attn_backend=abk),
         donate_argnums=(1,),
     )
     return fn, (ap_sh, apages_sh, aidx_sh["block_tables"],

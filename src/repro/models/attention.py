@@ -86,6 +86,49 @@ def attend_dense(
     return out.reshape(b, sq, hq, d).astype(q.dtype)
 
 
+@_scoped("attend_dense_quant")
+def attend_dense_quant(
+    q: jnp.ndarray,            # (B, Sq, Hq, D)
+    k: jnp.ndarray,            # (B, Skv, Hkv, D) int8
+    v: jnp.ndarray,
+    k_scale: jnp.ndarray,      # (B, Skv, Hkv)
+    v_scale: jnp.ndarray,
+    q_pos: jnp.ndarray,        # (B, Sq)
+    kv_pos: jnp.ndarray,       # (B, Skv)
+    window: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,  # (B, Skv) bool
+) -> jnp.ndarray:
+    """Dense attention over an int8 KV view without dequantizing it.
+
+    The chunked-prefill int8 path used to materialize the *entire*
+    gathered KV view in fp32 (4× the cache bytes per chunk) just to call
+    :func:`attend_dense`.  Here the scales fold into the probabilities
+    exactly as :func:`attend_decode_quant` does on the decode path —
+    ``scores_t = (q·k_t)·s_k[t]``, ``out = Σ_t (p_t·s_v[t])·v_t`` — so
+    the contraction reads the int8 view directly (1 byte/element) and the
+    fp32 copy never exists.
+    """
+    b, sq, hq, d = q.shape
+    n_kv = k.shape[2]
+    qg = _group_query_heads(q, n_kv).astype(jnp.bfloat16)  # (B,Sq,Hkv,G,D)
+    scale = d ** -0.5
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.bfloat16),
+                        preferred_element_type=jnp.float32) * scale
+    ks = k_scale.astype(jnp.float32).transpose(0, 2, 1)    # (B,Hkv,Skv)
+    scores = scores * ks[:, :, None, None, :]
+    mask = _mask(q_pos, kv_pos, window)[:, None, None]     # (B,1,1,Sq,Skv)
+    if kv_valid is not None:
+        mask = jnp.logical_and(mask, kv_valid[:, None, None, None, :])
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    vs = v_scale.astype(jnp.float32).transpose(0, 2, 1)
+    pv = probs * vs[:, :, None, None, :]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pv.astype(jnp.bfloat16),
+                     v.astype(jnp.bfloat16),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
 @_scoped("attend_flash")
 def attend_flash(
     q: jnp.ndarray,            # (B, S, Hq, D)
@@ -325,14 +368,33 @@ def attend_paged_decode(
     window: int = 0,
     k_scale: Optional[jnp.ndarray] = None,  # (P, page, Hkv) int8 pools only
     v_scale: Optional[jnp.ndarray] = None,
+    attn_backend: str = "gather",
 ) -> jnp.ndarray:
     """Single-token decode reading K/V through the block table.
 
-    The gathered view is exactly the dense cache the fixed-slot engine
-    holds (unwritten logical positions are masked by ``cur_pos``), so this
-    path is token-identical to :func:`attend_decode` — pages only change
-    *where* the bytes live, not the math.
+    ``attn_backend`` picks the read path (resolved once into the plan —
+    ``EnginePlan.attn_backend`` — and threaded down, never decided here):
+
+    * ``gather`` — the reference: materialize each lane's logical KV view
+      from the pool, then attend.  The gathered view is exactly the dense
+      cache the fixed-slot engine holds (unwritten logical positions are
+      masked by ``cur_pos``), so this path is token-identical to
+      :func:`attend_decode` — pages only change *where* the bytes live,
+      not the math.
+    * ``pallas_interpret`` / ``pallas_tpu`` — the fused in-place kernel
+      (``repro.kernels.paged_attention``): the block table drives the K/V
+      BlockSpec index maps, pages are read from the pool exactly once and
+      the gathered copy never exists; token-identity against ``gather``
+      is pinned by ``tests/test_paged_attention.py``.
     """
+    if attn_backend in ("pallas_interpret", "pallas_tpu"):
+        from repro.kernels.paged_attention.ops import paged_attention
+
+        return paged_attention(q, k_pages, v_pages, block_tables, cur_pos,
+                               window, k_scale, v_scale,
+                               attn_backend=attn_backend)
+    if attn_backend != "gather":
+        raise ValueError(f"unknown attention backend {attn_backend!r}")
     kg = gather_kv_pages(k_pages, block_tables)
     vg = gather_kv_pages(v_pages, block_tables)
     if k_scale is not None:

@@ -22,12 +22,13 @@ import jax.numpy as jnp
 from repro.config.base import EngineConfig, ModelConfig
 from repro.dist.hints import shard_batch_seq
 from repro.dist.sharding import _ROW as _ROW_PARALLEL
-from repro.engine import as_plan, pack_linear
+from repro.engine import as_plan, pack_linear, resolve_attn_backend
 from repro.models.attention import (
     FLASH_THRESHOLD,
     attend_decode,
     attend_decode_quant,
     attend_dense,
+    attend_dense_quant,
     attend_flash,
     attend_local_gather,
     attend_paged_decode,
@@ -855,6 +856,7 @@ def decode_step_paged(
     tokens: jnp.ndarray,                 # (B, 1) or (B, 1, K) for audio
     cfg: ModelConfig,
     eng: Optional[EngineConfig] = None,
+    attn_backend: Optional[str] = None,
 ) -> Tuple[jnp.ndarray, Any]:
     """One token of autoregressive decode over paged KV.
 
@@ -862,9 +864,15 @@ def decode_step_paged(
     block table only relocates KV bytes into shared pages.  Inactive lanes
     (idle, or mid-prefill — their pages must stay frozen) scatter their
     garbage K/V into the null page and their logits are ignored by the
-    caller.  Returns ``(logits, new_pages)``.
+    caller.  ``attn_backend`` overrides the plan's resolved decode-read
+    path (``gather`` reference vs the fused in-place Pallas kernel); None
+    defers to the plan, and no plan means "auto".  Returns
+    ``(logits, new_pages)``.
     """
     eng = as_plan(eng)
+    if attn_backend is None and eng is not None:
+        attn_backend = eng.attn_backend
+    attn_backend = resolve_attn_backend(attn_backend)
     b = tokens.shape[0]
     dh, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     if cfg.family == "audio":
@@ -903,12 +911,14 @@ def decode_step_paged(
             nvs = xs["vs"].at[pidx, poff].set(
                 vs_new.astype(xs["vs"].dtype))
             o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win,
-                                    k_scale=nks, v_scale=nvs)
+                                    k_scale=nks, v_scale=nvs,
+                                    attn_backend=attn_backend)
             ys["ks"], ys["vs"] = nks, nvs
         else:
             nkp = kp.at[pidx, poff].set(k[:, 0].astype(kp.dtype))
             nvp = vp.at[pidx, poff].set(v[:, 0].astype(vp.dtype))
-            o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win)
+            o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win,
+                                    attn_backend=attn_backend)
         o = dense(lp["attn"]["wo"], o.reshape(b, 1, hq * dh), eng)
         x = x + o
         if cfg.family == "moe":
@@ -989,20 +999,25 @@ def prefill_chunk(
                 ks_new.astype(xs["ks"].dtype))
             nvs = xs["vs"].at[pidx, poff].set(
                 vs_new.astype(xs["vs"].dtype))
-            kg = (gather_kv_pages(nkp, block_tables).astype(jnp.float32)
-                  * gather_kv_pages(nks, block_tables)
-                  .astype(jnp.float32)[..., None])
-            vg = (gather_kv_pages(nvp, block_tables).astype(jnp.float32)
-                  * gather_kv_pages(nvs, block_tables)
-                  .astype(jnp.float32)[..., None])
+            # the gathered view stays int8 — scales fold into the
+            # probabilities per block (attend_dense_quant), matching the
+            # decode path's attend_decode_quant math.  The old code
+            # dequantized the whole gathered view to fp32 here, allocating
+            # 4× the cache bytes per chunk.
+            kg = gather_kv_pages(nkp, block_tables)
+            vg = gather_kv_pages(nvp, block_tables)
+            ksg = gather_kv_pages(nks, block_tables)
+            vsg = gather_kv_pages(nvs, block_tables)
+            o = attend_dense_quant(q, kg, vg, ksg, vsg, positions, kv_pos,
+                                   win, kv_valid=kv_valid)
             ys["ks"], ys["vs"] = nks, nvs
         else:
             nkp = kp.at[pidx, poff].set(k.astype(kp.dtype))
             nvp = vp.at[pidx, poff].set(v.astype(vp.dtype))
             kg = gather_kv_pages(nkp, block_tables)
             vg = gather_kv_pages(nvp, block_tables)
-        o = attend_dense(q, kg, vg, positions, kv_pos, win,
-                         kv_valid=kv_valid)
+            o = attend_dense(q, kg, vg, positions, kv_pos, win,
+                             kv_valid=kv_valid)
         o = dense(lp["attn"]["wo"], o.reshape(b, c, hq * dh), eng)
         x = x + o
         if cfg.family == "moe":

@@ -43,7 +43,7 @@ from repro.dist.sharding import (
     param_shardings,
     pool_pages_for_mesh,
 )
-from repro.engine import resolve_plan
+from repro.engine import resolve_attn_backend, resolve_plan
 from repro.models import (
     decode_step,
     decode_step_paged,
@@ -101,6 +101,12 @@ class ServeEngine:
     smaller pools trade preemptions for memory, admission is always
     capacity-checked).
 
+    ``attn_backend``: paged decode-attention read path — ``gather`` (the
+    materialize-then-attend reference) or the fused in-place Pallas kernel
+    (``pallas_interpret`` / ``pallas_tpu``).  None defers to the resolved
+    plan (``EngineConfig.attn_backend``), whose ``"auto"`` picks the
+    kernel on TPU and ``gather`` elsewhere.
+
     ``mesh``: run on a production ``(data, model)`` mesh — params are
     placed by ``dist.sharding.param_shardings`` (TP), the KV page pool by
     ``cache_shardings`` (pages over ``data``, heads over ``model``; the
@@ -124,6 +130,7 @@ class ServeEngine:
         n_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
         mesh=None,
+        attn_backend: Optional[str] = None,
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
@@ -143,6 +150,17 @@ class ServeEngine:
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.kv_bits = self.plan.kv_bits if self.plan is not None else 0
+        # the paged decode-attention read path (gather reference vs the
+        # fused in-place kernel): explicit kwarg beats the plan beats the
+        # raw EngineConfig (which still carries attn_backend when the
+        # engine itself is disabled and the plan resolves to None).  The
+        # mesh rides into resolution: "auto" on a mesh stays gather (the
+        # kernel is not shard_mapped over the sharded pool yet).
+        self.attn_backend = resolve_attn_backend(
+            attn_backend
+            or (self.plan.attn_backend if self.plan is not None
+                else getattr(self.scfg.engine, "attn_backend", None)),
+            mesh=mesh)
 
         mode = mode or self.scfg.mode
         if mode == "auto":
@@ -192,10 +210,13 @@ class ServeEngine:
             # the page pool is donated: each step scatters into it and the
             # old value is dropped, so XLA may update the buffers in place
             # instead of copying the whole pool per token/chunk
+            abk_ = self.attn_backend
+
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _dec(params, pages, bt, pos, active, tokens):
                 return decode_step_paged(params, pages, bt, pos, active,
-                                         tokens, cfg_, plan_)
+                                         tokens, cfg_, plan_,
+                                         attn_backend=abk_)
 
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _pf(params, pages, bt, tokens, pos0, seq_lens):

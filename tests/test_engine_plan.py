@@ -180,8 +180,32 @@ def test_resolve_plan_memoized():
 
 
 def test_resolve_plan_legacy_use_pallas_false():
-    plan = resolve_plan(EngineConfig(weight_bits=4, use_pallas=False))
+    from repro.engine.plan import _resolve_cached
+
+    _resolve_cached.cache_clear()  # memoization would swallow the warning
+    with pytest.warns(DeprecationWarning, match="use_pallas is deprecated"):
+        plan = resolve_plan(EngineConfig(weight_bits=4, use_pallas=False))
     assert plan.backend == "reference"
+
+
+def test_use_pallas_warns_only_when_influential():
+    """The deprecation warning fires only when the legacy knob actually
+    changes plan resolution — an explicit backend or the default
+    use_pallas=True stay silent (the PR-1 shim can be deleted at the next
+    re-anchor once nothing trips this)."""
+    import warnings
+
+    from repro.engine.plan import _resolve_cached
+
+    _resolve_cached.cache_clear()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        # explicit backend: use_pallas=False is ignored, no warning
+        plan = resolve_plan(EngineConfig(weight_bits=4, use_pallas=False,
+                                         backend="reference"))
+        assert plan.backend == "reference"
+        # default knob value: nothing legacy happening
+        resolve_plan(EngineConfig(weight_bits=4, backend="bit_serial"))
 
 
 def test_resolve_plan_auto_off_tpu():
