@@ -1,0 +1,225 @@
+#!/usr/bin/env python
+"""Prefix-cache benchmark: shared-prefix serving with and without the
+radix-tree KV cache.
+
+The workload models the dominant production shape: many requests sharing
+one long system prompt, each with a short unique suffix.  One priming
+request (the bare prefix) is served first, then a batch of
+``batch × n_reqs_per_lane`` shared-prefix requests:
+
+  * ``nocache``   — every request re-prefills the whole prompt;
+  * ``prefix``    — requests match the radix tree and prefill **only the
+    unique suffix** (matched full pages are mapped shared, refcounted).
+
+Gates (enforced under ``--smoke``, recorded always):
+
+  * **token identity** — cached greedy output ≡ no-cache output;
+  * **compute ∝ unique suffix** — with the prefix page-aligned, prefill
+    tokens computed with the cache is *exactly*
+    ``(prefix + 1) + n_requests × suffix`` (the priming prompt plus each
+    unique suffix), vs ``(prefix + 1) + n_requests × (prefix + suffix)``
+    cold;
+  * **throughput** — end-to-end tok/s strictly above no-cache at
+    shared-prefix batch ≥ 4.
+
+Results land in ``BENCH_prefix.json`` plus repo-standard CSV rows.
+
+  PYTHONPATH=src python benchmarks/prefix_bench.py            # full sweep
+  PYTHONPATH=src python benchmarks/prefix_bench.py --smoke    # CI: batch 4
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+def _build(arch: str):
+    import jax
+
+    from repro.config import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _workload(cfg, n_reqs: int, prefix_len: int, suffix_len: int):
+    """One shared prefix (page-aligned by construction in ``_serve``),
+    unique per-request suffixes, plus the priming prompt."""
+    prefix = [(3 * j + 1) % cfg.vocab_size for j in range(prefix_len)]
+    primer = prefix + [2]
+    prompts = [
+        prefix + [(5 * i + j + 7) % cfg.vocab_size
+                  for j in range(suffix_len)]
+        for i in range(n_reqs)
+    ]
+    return primer, prompts
+
+
+def _serve(cfg, params, cached: bool, batch: int, primer, prompts,
+           max_new: int, max_len: int, page_size: int = 8,
+           prefill_chunk: int = 16):
+    from repro.config.base import EngineConfig, ServeConfig
+    from repro.serve import ServeEngine
+
+    scfg = ServeConfig(
+        max_new_tokens=max_new, engine=EngineConfig(backend="reference"),
+        page_size=page_size, prefill_chunk=prefill_chunk)
+    eng = ServeEngine(cfg, params, scfg, n_slots=batch, max_len=max_len,
+                      mode="paged", prefix_cache=cached)
+    # warm the jits on a disjoint token range (never matches the prefix)
+    eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
+    eng.run()
+
+    t0 = time.perf_counter()
+    eng.submit(list(primer), max_new_tokens=1)
+    eng.run()  # priming completes (and, when cached, populates the tree)
+    computed0 = eng.prefill_computed
+    for p in prompts:
+        eng.submit(list(p))
+    done = eng.run()
+    wall = time.perf_counter() - t0
+
+    done = [r for r in done]
+    gen = sum(len(r.output) for r in done)
+    ttfts = [r.ttft for r in done if r.ttft is not None]
+    stats = eng.prefix_stats() or {}
+    return {
+        "mode": "prefix" if cached else "nocache",
+        "batch": batch,
+        "requests": len(done) + 1,  # + primer
+        "prompt_tokens": len(primer) + sum(len(p) for p in prompts),
+        "prefill_computed": int(eng.prefill_computed),
+        "prefill_computed_batch": int(eng.prefill_computed - computed0),
+        "gen_tokens": gen,
+        "wall_s": round(wall, 4),
+        "tok_per_s": round(gen / wall, 2) if wall > 0 else 0.0,
+        "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4) if ttfts else None,
+        "hit_tokens": int(stats.get("hit_tokens", 0)),
+        "cow_forks": int(stats.get("cow_forks", 0)),
+        "cached_pages": int(stats.get("cached_pages", 0)),
+        "preemptions": eng.preemptions,
+    }, {r.rid: r.output for r in done}
+
+
+def run(batches=(2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
+        prefix_len: int = 128, suffix_len: int = 4, max_new: int = 6,
+        page_size: int = 8, out: str = "BENCH_prefix.json"):
+    """Bench entry point (also registered in benchmarks.run).  Returns the
+    repo-standard (name, us_per_call, derived) CSV rows."""
+    assert prefix_len % page_size == 0, "keep the shared prefix page-aligned"
+    cfg, params = _build(arch)
+    max_len = prefix_len + suffix_len + max_new + 8
+    # warm process-level state for both paths (imports, jit infra, the
+    # prefix-cache host structures) so the first measured engine does not
+    # bill one-time costs to its mode
+    wp, wb = _workload(cfg, 2, page_size, 2)
+    for cached in (False, True):
+        _serve(cfg, params, cached, 2, wp, wb, 2, max_len, page_size)
+    results, rows = [], []
+    identical = True
+    compute_exact = True
+    def best_of(cached, batch, primer, prompts, reps=2):
+        """Serve ``reps`` times, keep the fastest wall — the tok/s gate
+        compares compute, not a CI runner's noisy-neighbor stalls.  The
+        deterministic fields (tokens, prefill_computed) are identical
+        across reps by construction."""
+        best = outs = None
+        for _ in range(reps):
+            r, o = _serve(cfg, params, cached, batch, primer, prompts,
+                          max_new, max_len, page_size)
+            if best is not None:
+                assert o == outs and (r["prefill_computed"]
+                                      == best["prefill_computed"])
+            if best is None or r["wall_s"] < best["wall_s"]:
+                best, outs = r, o
+            outs = o
+        return best, outs
+
+    for batch in batches:
+        n_reqs = n_reqs_per_lane * batch
+        primer, prompts = _workload(cfg, n_reqs, prefix_len, suffix_len)
+        cold, out_cold = best_of(False, batch, primer, prompts)
+        hot, out_hot = best_of(True, batch, primer, prompts)
+        identical &= out_cold == out_hot
+        # prefill compute ∝ unique suffix: every batch request matches the
+        # primed prefix exactly (page-aligned), computing only its suffix
+        compute_exact &= hot["prefill_computed_batch"] == n_reqs * suffix_len
+        compute_exact &= (cold["prefill_computed_batch"]
+                          == n_reqs * (prefix_len + suffix_len))
+        results.extend([cold, hot])
+        for r in (cold, hot):
+            us = 1e6 * r["wall_s"] / max(r["gen_tokens"], 1)
+            rows.append((f"serve_{r['mode']}_b{batch}", round(us, 1),
+                         f"tok/s={r['tok_per_s']}"
+                         f";prefill={r['prefill_computed']}"))
+
+    speedup = {
+        str(b): round(
+            next(r["tok_per_s"] for r in results
+                 if r["batch"] == b and r["mode"] == "prefix")
+            / max(next(r["tok_per_s"] for r in results
+                       if r["batch"] == b and r["mode"] == "nocache"),
+                  1e-9), 3)
+        for b in batches
+    }
+    record = {
+        "bench": "prefix",
+        "arch": arch,
+        "reduced": True,
+        "dtype": "float32",
+        "workload": {"n_reqs_per_lane": n_reqs_per_lane,
+                     "prefix_len": prefix_len, "suffix_len": suffix_len,
+                     "max_new": max_new, "page_size": page_size,
+                     "batches": list(batches)},
+        "results": results,
+        "prefix_over_nocache_tok_per_s": speedup,
+        "token_identical": bool(identical),
+        "prefill_scales_with_unique_suffix": bool(compute_exact),
+        "prefix_faster_at_batch4plus": all(
+            v > 1.0 for b, v in speedup.items() if int(b) >= 4),
+    }
+    if out:
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {out}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: batch 4 only, short generations")
+    ap.add_argument("--batches", type=int, nargs="*", default=None)
+    ap.add_argument("--out", default="BENCH_prefix.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = run(batches=tuple(args.batches or (4,)), max_new=5,
+                   out=args.out)
+    else:
+        rows = run(batches=tuple(args.batches or (2, 4)), out=args.out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(",".join(str(v) for v in row))
+
+    with open(args.out) as f:
+        record = json.load(f)
+    if not record["token_identical"]:
+        raise SystemExit("prefix-cache outputs diverged from no-cache")
+    if not record["prefill_scales_with_unique_suffix"]:
+        raise SystemExit(
+            "prefill compute did not scale with unique suffix tokens")
+    if args.smoke and not record["prefix_faster_at_batch4plus"]:
+        raise SystemExit(
+            "prefix-cache throughput fell below no-cache at b>=4")
+    print(f"# prefix/nocache tok/s: "
+          f"{record['prefix_over_nocache_tok_per_s']}  "
+          f"token_identical={record['token_identical']}  "
+          f"suffix_scaling={record['prefill_scales_with_unique_suffix']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ def main() -> None:
         fig4_scaling,
         fig6_latency,
         kernel_bench,
+        prefix_bench,
         roofline_summary,
         serve_bench,
         table1_fmax,
@@ -34,6 +35,7 @@ def main() -> None:
         "roofline": roofline_summary.run,
         "serve": serve_bench.run,
         "attn": attn_bench.run,
+        "prefix": prefix_bench.run,
     }
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

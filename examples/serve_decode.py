@@ -48,23 +48,28 @@ def main():
     print(f"loss {hist[0]:.3f} -> {hist[-1]:.3f}")
     params = tr.params
 
-    prompts = [[(7 * i + j) % cfg.vocab_size for j in range(3 + i % 4)]
+    # a shared "system prompt" prefix + per-request tails: the kind of
+    # stream the prefix cache collapses to suffix-only prefill
+    system = [(3 * j + 1) % cfg.vocab_size for j in range(16)]
+    prompts = [system + [(7 * i + j) % cfg.vocab_size
+                         for j in range(3 + i % 4)]
                for i in range(args.reqs)]
 
     results = {}
-    for label, mode, engine in (
-        ("slots-dense", "slots", EngineConfig()),
-        ("paged-dense", "paged", EngineConfig()),
+    for label, mode, engine, prefix_cache in (
+        ("slots-dense", "slots", EngineConfig(), False),
+        ("paged-dense", "paged", EngineConfig(), False),
+        ("paged-prefix-cache", "paged", EngineConfig(), True),
         ("paged-kv8", "paged",
-         EngineConfig(kv_bits=8, backend="reference")),
+         EngineConfig(kv_bits=8, backend="reference"), False),
         ("paged-imagine-int8", "paged",
-         EngineConfig(weight_bits=8, kv_bits=8, backend="reference")),
+         EngineConfig(weight_bits=8, kv_bits=8, backend="reference"), False),
     ):
         eng = ServeEngine(
             cfg, params,
             ServeConfig(max_new_tokens=args.tokens, engine=engine,
                         page_size=8, prefill_chunk=8),
-            n_slots=4, max_len=64, mode=mode)
+            n_slots=4, max_len=64, mode=mode, prefix_cache=prefix_cache)
         t0 = time.perf_counter()
         for p in prompts:
             eng.submit(p)
@@ -76,13 +81,21 @@ def main():
         results[label] = done
         extra = (f", preemptions={eng.preemptions}" if mode == "paged"
                  else "")
+        if eng.prefix_cache is not None:
+            st = eng.prefix_stats()
+            extra += (f", prefill computed {eng.prefill_computed} tokens "
+                      f"({st['hit_tokens']} from cache, "
+                      f"{st['cow_forks']} COW forks)")
         print(f"== {label}: {len(done)} requests, {dt:.1f}s, "
               f"weights={wbytes/1e6:.1f}MB, kv={kvbytes/1e6:.2f}MB{extra} ==")
         for r in sorted(done, key=lambda r: r.rid)[:3]:
-            print(f"  req{r.rid}: prompt={r.prompt} -> {r.output}")
+            hit = (f" ({r.cached_tokens} prompt tokens from cache)"
+                   if r.cached_tokens else "")
+            print(f"  req{r.rid}: prompt={r.prompt} -> {r.output}{hit}")
 
     base = {r.rid: r.output for r in results["slots-dense"]}
-    for label in ("paged-dense", "paged-kv8", "paged-imagine-int8"):
+    for label in ("paged-dense", "paged-prefix-cache", "paged-kv8",
+                  "paged-imagine-int8"):
         agree = sum(
             t1 == t2
             for r in results[label]

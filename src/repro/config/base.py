@@ -266,9 +266,6 @@ class EngineConfig:
         the fused in-place kernel, else the gather reference), "gather",
         "pallas_interpret" or "pallas_tpu".  Resolved into the plan like
         ``backend``.
-    ``use_pallas``: DEPRECATED legacy knob, honoured only when ``backend``
-        is "auto" (False pins the "reference" backend); resolution emits a
-        ``DeprecationWarning`` whenever it actually changes the plan.
     ``sharded``: wrap ``backend`` in the mesh-native ``sharded`` dispatch
         (shard_map over the mesh's model axis; the mesh itself is supplied
         at plan resolution — ``resolve_plan(cfg, mesh=...)``).
@@ -282,7 +279,6 @@ class EngineConfig:
     act_dtype: str = "bfloat16"
     backend: str = "auto"        # engine backend name (see repro.engine)
     attn_backend: str = "auto"   # paged decode-attention read path
-    use_pallas: bool = True      # DEPRECATED: pre-EnginePlan dispatch knob
     tile_m: int = 256            # engine tile rows   (PE columns per tile)
     tile_k: int = 512            # engine tile depth  (weights streamed E->W)
     sharded: bool = False        # mesh-native dispatch (docs/sharding.md)
@@ -343,6 +339,9 @@ class ServeConfig:
     ``n_pages``: physical pages in the shared pool; 0 sizes the pool to
     the full ``n_slots × max_len`` rectangle (no preemption).
     ``prefill_chunk``: prompt tokens per batched chunked-prefill step.
+    ``prefix_cache``: share KV pages across requests through the
+    radix-tree prefix cache (``repro.serve.prefix_cache``) — matched
+    prompt prefixes skip prefill entirely; paged mode only.
     """
 
     max_new_tokens: int = 32
@@ -353,6 +352,7 @@ class ServeConfig:
     page_size: int = 16
     n_pages: int = 0                  # 0 = full capacity (never preempts)
     prefill_chunk: int = 32
+    prefix_cache: bool = False        # radix-tree KV reuse (paged only)
 
     def __post_init__(self):
         if self.mode not in ("auto", "paged", "slots"):

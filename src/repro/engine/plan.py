@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Any, Optional
 
 import jax.numpy as jnp
@@ -154,17 +153,6 @@ def _resolve_cached(cfg, backend: Optional[str], mesh) -> Optional[EnginePlan]:
     if not cfg.enabled and not getattr(cfg, "kv_bits", 0):
         return None
     name = backend or getattr(cfg, "backend", "auto") or "auto"
-    if name == "auto" and not getattr(cfg, "use_pallas", True):
-        # legacy knob: use_pallas=False meant "exact jnp path, please".
-        # Warn only when the knob actually influences resolution (here),
-        # not on every config carrying the default — the shim is slated
-        # for deletion at the next re-anchor.
-        warnings.warn(
-            "EngineConfig.use_pallas is deprecated and scheduled for "
-            "removal; say EngineConfig(backend='reference') instead of "
-            "use_pallas=False",
-            DeprecationWarning, stacklevel=3)
-        name = "reference"
     inner = None
     if getattr(cfg, "sharded", False) and name != "sharded":
         # cfg.backend names the *wrapped* backend; "sharded" is the

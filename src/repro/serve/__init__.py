@@ -6,7 +6,14 @@
 """
 
 from repro.serve.engine import Request, ServeEngine
-from repro.serve.pages import KVPages, PageAllocator, init_kv_pages, pages_for
+from repro.serve.pages import (
+    KVPages,
+    PageAllocator,
+    fork_tail_page,
+    init_kv_pages,
+    pages_for,
+)
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampler import sample
 from repro.serve.scheduler import PagedScheduler
 
@@ -14,8 +21,10 @@ __all__ = [
     "KVPages",
     "PageAllocator",
     "PagedScheduler",
+    "PrefixCache",
     "Request",
     "ServeEngine",
+    "fork_tail_page",
     "init_kv_pages",
     "pages_for",
     "sample",

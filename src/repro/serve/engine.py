@@ -28,6 +28,7 @@ import collections
 import contextlib
 import dataclasses
 import functools
+import logging
 import time
 from typing import Deque, Dict, List, Optional
 
@@ -54,11 +55,15 @@ from repro.models import prefill_chunk as _prefill_chunk_fn
 from repro.serve.pages import (
     PAGED_FAMILIES,
     PageAllocator,
+    fork_tail_page,
     init_kv_pages,
     pages_for,
 )
+from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampler import sample
 from repro.serve.scheduler import PagedScheduler
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -78,6 +83,8 @@ class Request:
     prefill_pos: int = 0
     admit_seq: int = -1
     preemptions: int = 0
+    # prefill tokens served from the prefix cache at (re-)admission
+    cached_tokens: int = 0
     # time-to-first-token relative to ``run()`` start (benchmarks)
     ttft: Optional[float] = None
 
@@ -107,13 +114,23 @@ class ServeEngine:
     plan (``EngineConfig.attn_backend``), whose ``"auto"`` picks the
     kernel on TPU and ``gather`` elsewhere.
 
+    ``prefix_cache``: share KV pages across requests
+    (:mod:`repro.serve.prefix_cache`) — prompts are matched against a
+    radix tree of resident pages at admission and only the unmatched
+    suffix is prefilled; completed prefills are inserted back into the
+    tree.  A bool (``None`` defers to ``ServeConfig.prefix_cache``); the
+    engine owns its :class:`PrefixCache` — the tree indexes this engine's
+    pool, so foreign instances are rejected.  Paged mode only.  Cache
+    state (tree, refcounts) is host-side, exactly like block tables — it
+    does not change what any jitted step sees.
+
     ``mesh``: run on a production ``(data, model)`` mesh — params are
     placed by ``dist.sharding.param_shardings`` (TP), the KV page pool by
     ``cache_shardings`` (pages over ``data``, heads over ``model``; the
     pool is padded so the page axis divides), and the plan is resolved
     with the mesh so ``EngineConfig.sharded`` backends shard_map their
-    GEMVs.  The allocator, block tables and scheduler stay host-side
-    exactly as on one device.
+    GEMVs.  The allocator, block tables, scheduler and prefix cache stay
+    host-side exactly as on one device.
     """
 
     def __init__(
@@ -129,6 +146,7 @@ class ServeEngine:
         page_size: Optional[int] = None,
         n_pages: Optional[int] = None,
         prefill_chunk: Optional[int] = None,
+        prefix_cache=None,
         mesh=None,
         attn_backend: Optional[str] = None,
     ):
@@ -163,8 +181,21 @@ class ServeEngine:
             mesh=mesh)
 
         mode = mode or self.scfg.mode
+        auto_fallback = False
         if mode == "auto":
-            mode = "paged" if cfg.family in PAGED_FAMILIES else "slots"
+            if cfg.family in PAGED_FAMILIES:
+                mode = "paged"
+            else:
+                auto_fallback = True
+                # the silent fallback hid a capability gap (ROADMAP open
+                # item: zamba2's shared-attention sites do have a real KV
+                # cache) — name the family so operators see which models
+                # run the legacy fixed-slot engine
+                logger.warning(
+                    "ServeEngine: family %r has no pageable KV cache; "
+                    "falling back to mode='slots' (fixed-slot engine, "
+                    "no paging, no prefix cache)", cfg.family)
+                mode = "slots"
         if mode == "paged" and cfg.family not in PAGED_FAMILIES:
             raise ValueError(
                 f"family {cfg.family!r} has no pageable KV cache; "
@@ -172,6 +203,25 @@ class ServeEngine:
         if mode not in ("paged", "slots"):
             raise ValueError(f"unknown serve mode {mode!r}")
         self.mode = mode
+
+        if prefix_cache is None:
+            prefix_cache = self.scfg.prefix_cache
+        if not isinstance(prefix_cache, bool):
+            # an instance would index a *different* pool's pages — and an
+            # empty one would even be falsy; refuse rather than surprise
+            raise TypeError(
+                f"prefix_cache must be a bool (got "
+                f"{type(prefix_cache).__name__}); the engine builds and "
+                "owns the PrefixCache over its own page pool")
+        if prefix_cache and mode != "paged":
+            if auto_fallback:
+                # the fallback warning above already names the family;
+                # a generic prefix-cache config must not explode on it
+                prefix_cache = False
+            else:
+                raise ValueError(
+                    "prefix_cache shares KV *pages* across requests; "
+                    "mode='slots' has no page pool to share")
 
         self.queue: Deque[Request] = collections.deque()
         self._next_rid = 0
@@ -198,7 +248,14 @@ class ServeEngine:
                     self.pages, cache_shardings(mesh, self.pages))
             self.alloc = PageAllocator(n_pages, self.page_size, n_slots,
                                        max_len)
-            self.sched = PagedScheduler(self.alloc, self.prefill_chunk)
+            # the prefix cache attaches to the allocator (resident-page
+            # ownership + LRU eviction when the free list runs dry)
+            self.prefix_cache = None
+            if prefix_cache:
+                self.prefix_cache = PrefixCache(self.alloc)
+                self.alloc.attach_cache(self.prefix_cache)
+            self.sched = PagedScheduler(self.alloc, self.prefill_chunk,
+                                        prefix_cache=self.prefix_cache)
             # lane-state shardings are computed once: block tables and
             # positions always enter the device under their mesh placement
             self._table_shardings = None
@@ -226,6 +283,7 @@ class ServeEngine:
             self._decode_paged = _dec
             self._prefill_paged = _pf
         else:
+            self.prefix_cache = None
             if self.kv_bits:
                 raise ValueError(
                     "kv_bits is wired through the paged engine "
@@ -290,17 +348,37 @@ class ServeEngine:
     def preemptions(self) -> int:
         return self.sched.preemptions if self.mode == "paged" else 0
 
+    @property
+    def prefill_computed(self) -> int:
+        """Prompt tokens actually run through ``prefill_chunk`` (cache
+        hits keep this below the total submitted prompt tokens)."""
+        return self.sched.prefill_computed if self.mode == "paged" else 0
+
+    def prefix_stats(self) -> Optional[Dict[str, int]]:
+        return (self.prefix_cache.stats()
+                if self.prefix_cache is not None else None)
+
     # ================================================== paged internals
     def _run_paged(self) -> List[Request]:
         finished: List[Request] = []
         while self.sched.has_work():
             self.sched.admit()
+            self._apply_forks()
             self._prefill_once()
             # pre-decode retire: max_new_tokens=0 must emit no tokens
             finished.extend(self._retire_paged(limit_only=True))
             self._decode_once_paged()
             finished.extend(self._retire_paged())
         return finished
+
+    def _apply_forks(self) -> None:
+        """Run the device copies of pending copy-on-write forks (mid-page
+        cache hits recorded at admission) before anything reads or writes
+        the forked pages."""
+        for src, dst in self.sched.pending_forks:
+            self.pages = fork_tail_page(
+                self.pages, jnp.int32(src), jnp.int32(dst))
+        self.sched.pending_forks.clear()
 
     def _prefill_once(self) -> None:
         """Advance every pending prompt by one batched chunk."""
@@ -321,6 +399,12 @@ class ServeEngine:
             self.alloc.pos[slot] += n_real
             if req.prefill_pos >= len(req.prefill_tokens):
                 req.last_logits = lg[slot, -1]
+                if self.prefix_cache is not None:
+                    # the prompt's full pages are write-frozen from here
+                    # (decode appends at pos >= len(prefill_tokens)):
+                    # publish them for other requests to share
+                    self.prefix_cache.insert(req.prefill_tokens,
+                                             self.alloc.block_row(slot))
 
     def _decode_once_paged(self) -> None:
         lanes = self.sched.decode_lanes()

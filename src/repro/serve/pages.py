@@ -21,6 +21,21 @@ Two pieces:
   batch lanes and masked prefill positions scatter there, so the jitted
   model functions never need a dynamic shape or a write-predicate.
 
+  As of the prefix-cache subsystem (``repro.serve.prefix_cache``) pages
+  are **reference counted**: one physical page may back many lanes' block
+  tables (a shared prompt prefix), and a page only becomes reclaimable
+  when its refcount drops to 0.  Refcount-0 pages held by an attached
+  prefix cache stay *resident* (cached, LRU-evictable) instead of
+  returning to the free list; ``_take_page`` transparently evicts them
+  when the free list runs dry.  All page release goes through
+  ``free_slot`` / ``_release_page`` — nothing outside this module may
+  touch the free list directly (CI greps for bypasses).
+
+* :func:`fork_tail_page` — the device-side copy-on-write primitive: a
+  cache hit that ends mid-page clones the donor's partially-filled tail
+  page into a freshly-allocated private page, so the new request can keep
+  writing without corrupting the shared bytes.
+
 The allocator is deliberately numpy/host-side — the jitted paged decode
 and chunked prefill steps (``repro.models.transformer``) only ever see the
 ``KVPages`` arrays plus ``(block_tables, pos, active)`` index arrays.
@@ -29,6 +44,7 @@ and chunked prefill steps (``repro.models.transformer``) only ever see the
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import List, Optional, Tuple
 
@@ -136,13 +152,21 @@ def pages_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Host-side block tables + free list over a :class:`KVPages` pool.
+    """Host-side block tables + refcounted free list over a
+    :class:`KVPages` pool.
 
     ``n_slots`` batch lanes each own a ``(max_blocks,)`` block table row
     (logical block i -> physical page id; ``NULL_PAGE`` where unmapped) and
     a token count ``pos``.  Pages come from one shared free list, so total
     physical capacity is ``(n_pages - 1) * page_size`` tokens across all
     lanes instead of ``n_slots * max_len``.
+
+    **Refcount invariants** (property-pinned by
+    ``tests/test_prefix_cache.py``): a page mapped by ``k`` block tables
+    has ``refcount == k``; refcounts never go negative; page 0 (the null
+    page) is never allocated, freed, shared or evicted; a released page
+    returns to the free list unless an attached prefix cache holds it
+    resident (then it parks as an evictable cached page).
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
@@ -160,7 +184,20 @@ class PageAllocator:
         self.block_tables = np.full((n_slots, self.max_blocks), NULL_PAGE,
                                     np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
-        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self._mapped: List[List[int]] = [[] for _ in range(n_slots)]
+        self.refcount = np.zeros((n_pages,), np.int32)
+        self._cache = None  # attached PrefixCache (eviction provider)
+
+    # -------------------------------------------------------- prefix cache
+    def attach_cache(self, cache) -> None:
+        """Register a prefix cache as the resident-page owner + evictor.
+
+        The cache keeps refcount-0 pages resident (``cache.holds``) and
+        hands them back through ``cache.evict`` when the free list runs
+        dry; the allocator's capacity arithmetic counts those pages as
+        available.
+        """
+        self._cache = cache
 
     # ----------------------------------------------------------- capacity
     @property
@@ -168,37 +205,117 @@ class PageAllocator:
         return len(self.free)
 
     @property
+    def evictable_pages(self) -> int:
+        """Cached refcount-0 pages the attached prefix cache could evict."""
+        return self._cache.evictable_count() if self._cache is not None else 0
+
+    @property
     def used_pages(self) -> int:
         return (self.n_pages - 1) - len(self.free)
+
+    def can_allocate(self, n_pages: int) -> bool:
+        """Could ``n_pages`` fresh pages be produced right now (free list
+        plus evictable cached pages)?  The free list answers first — the
+        evictable count is a tree walk and is only consulted when the
+        free list alone is short (keeps the per-decode-token ``ensure``
+        O(1) while pages remain free)."""
+        if n_pages <= len(self.free):
+            return True
+        return n_pages <= len(self.free) + self.evictable_pages
 
     def can_admit(self, n_tokens: int) -> bool:
         """Capacity-based admission: is there room for a request whose
         prompt is ``n_tokens`` plus one decode token?"""
-        return pages_for(n_tokens + 1, self.page_size) <= len(self.free)
+        return self.can_allocate(pages_for(n_tokens + 1, self.page_size))
 
     # --------------------------------------------------------- allocation
+    def _take_page(self) -> Optional[int]:
+        """Pop a free page, evicting cached refcount-0 pages if needed."""
+        if not self.free and self._cache is not None:
+            self._cache.evict(1)
+        if not self.free:
+            return None
+        return self.free.pop()
+
+    def alloc_page(self, slot: int) -> Optional[int]:
+        """Allocate one private page as ``slot``'s next block (refcount 1).
+        Used for the copy-on-write fork target of a mid-page cache hit."""
+        page = self._take_page()
+        if page is None:
+            return None
+        self.refcount[page] = 1
+        blk = len(self._mapped[slot])
+        self._mapped[slot].append(page)
+        self.block_tables[slot, blk] = page
+        return page
+
+    def map_shared(self, slot: int, pages: List[int]) -> None:
+        """Map already-resident (cached) pages as ``slot``'s leading
+        blocks, taking one reference on each — the prefix-cache hit path.
+        Must run before any private allocation for the slot."""
+        if self._mapped[slot]:
+            raise ValueError(
+                f"slot {slot} already holds pages; map the shared prefix "
+                "before allocating private pages")
+        for blk, page in enumerate(pages):
+            if page == NULL_PAGE:
+                raise ValueError("cannot share the null page")
+            self.refcount[page] += 1
+            self._mapped[slot].append(page)
+            self.block_tables[slot, blk] = page
+
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s block table to cover ``n_tokens`` logical tokens.
-        Returns False (allocating nothing) if the free list runs dry."""
+        Returns False (allocating nothing) if the free list runs dry even
+        after evicting cached pages."""
         need = pages_for(n_tokens, self.page_size)
         if need > self.max_blocks:
             raise ValueError(
                 f"slot {slot} wants {n_tokens} tokens > max_len capacity")
-        have = len(self._owned[slot])
-        if need - have > len(self.free):
+        have = len(self._mapped[slot])
+        if need <= have:
+            return True  # nothing to grant (the per-decode-token case)
+        if not self.can_allocate(need - have):
             return False
         for blk in range(have, need):
-            page = self.free.pop()
-            self._owned[slot].append(page)
+            page = self._take_page()
+            assert page is not None, "can_allocate granted but pool is dry"
+            self.refcount[page] = 1
+            self._mapped[slot].append(page)
             self.block_tables[slot, blk] = page
         return True
 
+    def _release_page(self, page: int) -> None:
+        """Drop one reference; at refcount 0 the page returns to the free
+        list unless the prefix cache holds it resident (then it stays as
+        an evictable cached page).  The only legal way to free a page."""
+        if page == NULL_PAGE:
+            raise ValueError("the null page is never freed")
+        self.refcount[page] -= 1
+        if self.refcount[page] < 0:
+            raise AssertionError(f"page {page} refcount went negative")
+        if self.refcount[page] == 0 and not (
+                self._cache is not None and self._cache.holds(page)):
+            self.free.append(page)
+
+    def _reclaim_evicted(self, page: int) -> None:
+        """Return an evicted cache-resident page (refcount already 0) to
+        the free list.  Called by the prefix cache only."""
+        assert page != NULL_PAGE and self.refcount[page] == 0
+        self.free.append(page)
+
     def free_slot(self, slot: int) -> None:
-        """Reclaim every page the slot owns (request retired or preempted)."""
-        self.free.extend(reversed(self._owned[slot]))
-        self._owned[slot] = []
+        """Release every page the slot maps (request retired or preempted).
+        Shared pages survive under their other owners / the prefix cache."""
+        for page in reversed(self._mapped[slot]):
+            self._release_page(page)
+        self._mapped[slot] = []
         self.block_tables[slot, :] = NULL_PAGE
         self.pos[slot] = 0
+
+    def block_row(self, slot: int) -> np.ndarray:
+        """The slot's block-table row (a copy — safe to hand to the tree)."""
+        return self.block_tables[slot].copy()
 
     # -------------------------------------------------------------- views
     def device_tables(self, shardings=None
@@ -215,3 +332,32 @@ class PageAllocator:
             return (jax.device_put(self.block_tables, shardings[0]),
                     jax.device_put(self.pos, shardings[1]))
         return jnp.asarray(self.block_tables), jnp.asarray(self.pos)
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: fork a partially-filled tail page
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def fork_tail_page(pages: KVPages, src: jnp.ndarray,
+                   dst: jnp.ndarray) -> KVPages:
+    """Clone physical page ``src`` into ``dst`` across every layer (and the
+    scale pools when quantized) — the copy-on-write step of a mid-page
+    prefix-cache hit.
+
+    The whole page is copied: the matched prefix slots are the bytes being
+    shared, and every slot past the match point is overwritten by the
+    request's own suffix prefill before it can ever be attended (positions
+    ``>= pos`` are masked).  ``src``/``dst`` are traced scalars, so one
+    compilation serves every fork; the pool is donated so XLA can update
+    the buffers in place.
+    """
+    upd = {
+        "k": pages.k.at[:, dst].set(pages.k[:, src]),
+        "v": pages.v.at[:, dst].set(pages.v[:, src]),
+    }
+    if pages.quantized:
+        upd["k_scale"] = pages.k_scale.at[:, dst].set(pages.k_scale[:, src])
+        upd["v_scale"] = pages.v_scale.at[:, dst].set(pages.v_scale[:, src])
+    return pages.replace(**upd)

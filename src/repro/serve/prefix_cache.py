@@ -1,0 +1,273 @@
+"""Prefix cache: radix-tree KV reuse with ref-counted copy-on-write pages.
+
+IMAGine's premise is that data already resident in memory should be
+computed on in place, not re-materialized.  The serving stack violated
+that at the *request* level: every request re-prefilled its system prompt
+even when thousands of requests share it, re-writing identical KV pages
+the pool already holds.  This module makes the page pool shareable across
+requests:
+
+* **Radix tree at page granularity.**  A host-side trie over token-id
+  prefixes whose nodes own *full* KV pages: a node at depth ``d`` is keyed
+  by the ``page_size`` token ids covering logical positions
+  ``[d·page_size, (d+1)·page_size)`` and owns the physical page holding
+  their KV (for every layer — pages span all layers, so one node is one
+  page id).  KV for position ``t`` depends only on tokens ``<= t`` at
+  absolute positions, so any request whose prompt walks the same path can
+  reference the same physical pages byte-for-byte.
+
+* **Matching** (:meth:`PrefixCache.match`) walks full pages greedily,
+  then attempts one **mid-page** partial match: if the next cached page's
+  tokens agree with the prompt for ``n < page_size`` leading slots, the
+  donor page is cloned (:func:`repro.serve.pages.fork_tail_page` — copy
+  on write) into a private page so the request can keep writing its own
+  suffix into the remaining slots.  The total match is capped at
+  ``len(prompt) - 1`` tokens: at least one suffix token always runs
+  through ``prefill_chunk`` so the request has last-token logits to
+  sample from.
+
+* **Reference counts** live in the :class:`~repro.serve.pages.PageAllocator`
+  (a page may back many block tables); the tree itself holds **no**
+  refcount — a cached page whose refcount is 0 is *resident but idle*,
+  and is the eviction currency.
+
+* **LRU eviction** (:meth:`PrefixCache.evict`) reclaims refcount-0 cached
+  pages leaf-first (an interior node is pinned by its descendants: a
+  match must walk a contiguous path from the root) when the free list
+  runs dry.  Eviction is wired *into* ``PageAllocator._take_page``, so it
+  is always tried before the scheduler falls back to
+  preemption-by-recompute — dropping an idle cached page is strictly
+  cheaper than recomputing a live request.
+
+All of this is host-side numpy/dict state, exactly like the block tables:
+on a production mesh the tree and refcounts do not shard, only the page
+pool they index does.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.pages import NULL_PAGE, PageAllocator
+
+
+class MatchResult:
+    """One prompt's cache-hit description (host-side, cheap).
+
+    ``full_pages``: physical page ids whose whole ``page_size`` tokens
+    matched, in block order.  ``partial``: ``(donor_page, n_valid)`` when
+    the match continues ``n_valid`` tokens into a cached page (the COW
+    fork case), else None.  ``matched_tokens``: total prefix length
+    served from cache — the request prefills only from there.
+    """
+
+    __slots__ = ("full_pages", "partial", "matched_tokens")
+
+    def __init__(self, full_pages: List[int],
+                 partial: Optional[Tuple[int, int]], page_size: int):
+        self.full_pages = full_pages
+        self.partial = partial
+        self.matched_tokens = len(full_pages) * page_size + (
+            partial[1] if partial else 0)
+
+    def __bool__(self) -> bool:
+        return self.matched_tokens > 0
+
+
+class _Node:
+    """One cached full page: key = its page_size token ids, value = the
+    physical page id.  Children are the pages that extend this prefix."""
+
+    __slots__ = ("children", "parent", "key", "page", "last_used")
+
+    def __init__(self, parent: Optional["_Node"],
+                 key: Optional[Tuple[int, ...]], page: int):
+        self.children: Dict[Tuple[int, ...], "_Node"] = {}
+        self.parent = parent
+        self.key = key
+        self.page = page
+        self.last_used = 0
+
+
+class PrefixCache:
+    """The radix tree + eviction policy over a :class:`PageAllocator`.
+
+    Construction attaches the cache to the allocator: from then on the
+    allocator keeps refcount-0 cached pages resident, counts them as
+    allocatable capacity, and evicts through :meth:`evict` when the free
+    list runs dry.
+    """
+
+    def __init__(self, alloc: PageAllocator):
+        self.alloc = alloc
+        self.page_size = alloc.page_size
+        self.root = _Node(None, None, NULL_PAGE)
+        self._by_page: Dict[int, _Node] = {}
+        self._clock = 0
+        # counters (surfaced by ServeEngine.prefix_stats / the bench)
+        self.hits = 0            # admissions with matched_tokens > 0
+        self.misses = 0          # admissions with no match
+        self.hit_tokens = 0      # prefill tokens served from cache
+        self.cow_forks = 0       # mid-page matches (one page copy each)
+        self.inserted_pages = 0
+        self.evicted_pages = 0
+
+    # ------------------------------------------------------------- basics
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def holds(self, page: int) -> bool:
+        """Is this physical page resident in the tree?"""
+        return page in self._by_page
+
+    @property
+    def cached_pages(self) -> int:
+        return len(self._by_page)
+
+    # ------------------------------------------------------------ matching
+    def match(self, tokens) -> MatchResult:
+        """Longest cached prefix of ``tokens``, capped at ``len - 1``.
+
+        Touches the LRU clock of every node on the matched path (and the
+        mid-page donor).  Does **not** take references — the scheduler
+        maps the result through ``PageAllocator.map_shared`` only once
+        admission is certain.
+        """
+        ps = self.page_size
+        limit = len(tokens) - 1  # >= 1 token must remain to prefill
+        node, full = self.root, []
+        d = 0
+        while (d + 1) * ps <= limit:
+            child = node.children.get(tuple(tokens[d * ps:(d + 1) * ps]))
+            if child is None:
+                break
+            child.last_used = self._tick()
+            full.append(child.page)
+            node = child
+            d += 1
+        partial = None
+        rem = limit - d * ps
+        if rem > 0:
+            best_n, best = 0, None
+            for key, child in node.children.items():
+                n = 0
+                while n < rem and key[n] == tokens[d * ps + n]:
+                    n += 1
+                if n > best_n:
+                    best_n, best = n, child
+            if best is not None:
+                best.last_used = self._tick()
+                partial = (best.page, best_n)
+        return MatchResult(full, partial, ps)
+
+    # ----------------------------------------------------------- insertion
+    def insert(self, tokens, block_row: np.ndarray) -> int:
+        """Cache the full pages of a completed prefill.
+
+        ``tokens``: the request's prefill token ids; ``block_row``: its
+        block-table row (block ``d`` holds the page covering tokens
+        ``[d·ps, (d+1)·ps)``).  Only *full* pages enter the tree — the
+        partially-filled tail page keeps being written by decode and stays
+        private.  Pages already cached for the same prefix (the request
+        was itself a cache hit, or a cold duplicate raced in) are left in
+        place; a cold duplicate's private copy simply never becomes
+        shared and is freed at retire.  Returns the number of pages newly
+        inserted.  Inserting takes no reference: the tree holds pages
+        *resident*, the refcount only counts block-table owners.
+        """
+        ps = self.page_size
+        node, new = self.root, 0
+        for d in range(len(tokens) // ps):
+            key = tuple(int(t) for t in tokens[d * ps:(d + 1) * ps])
+            child = node.children.get(key)
+            if child is None:
+                page = int(block_row[d])
+                if page == NULL_PAGE:
+                    break  # block table shorter than the prompt: stop
+                if page in self._by_page:
+                    # a page id can live at one tree position only; this
+                    # can't happen for a consistent allocator (shared
+                    # pages match the existing node, private pages are
+                    # fresh) — guard rather than corrupt the tree.
+                    break
+                child = _Node(node, key, page)
+                node.children[key] = child
+                self._by_page[page] = child
+                new += 1
+            child.last_used = self._tick()
+            node = child
+        self.inserted_pages += new
+        return new
+
+    # ------------------------------------------------------------ eviction
+    def evictable_count(self) -> int:
+        """Pages reclaimable right now: cached nodes whose whole subtree
+        (themselves included) is refcount-0 — exactly the pages a
+        leaf-first eviction loop could drain.  Exactness matters: the
+        scheduler's capacity-based admission counts these as available.
+
+        Iterative post-order (a long prompt is one deep chain — one node
+        per page — so recursion would hit Python's stack limit at a few
+        thousand cached tokens).
+        """
+        ref = self.alloc.refcount
+        # (evictable_in_subtree, whole_subtree_refcount_free) per node
+        results: Dict[int, Tuple[int, bool]] = {}
+        stack: List[Tuple[_Node, bool]] = [(self.root, False)]
+        while stack:
+            node, visited = stack.pop()
+            if not visited:
+                stack.append((node, True))
+                for child in node.children.values():
+                    stack.append((child, False))
+                continue
+            total, subtree_free = 0, True
+            for child in node.children.values():
+                t, f = results.pop(id(child))
+                total += t
+                subtree_free &= f
+            if node is self.root:
+                return total
+            if subtree_free and ref[node.page] == 0:
+                results[id(node)] = (total + 1, True)
+            else:
+                results[id(node)] = (total, False)
+        return 0  # unreachable: the root always completes the walk
+
+    def evict(self, n_pages: int) -> int:
+        """Evict up to ``n_pages`` refcount-0 cached pages, LRU leaf-first,
+        returning them to the allocator's free list.  Never touches a page
+        with live references and never the null page.  Returns the number
+        actually evicted."""
+        ref = self.alloc.refcount
+        evicted = 0
+        while evicted < n_pages:
+            victim = None
+            for node in self._by_page.values():
+                if node.children or ref[node.page] != 0:
+                    continue
+                if victim is None or node.last_used < victim.last_used:
+                    victim = node
+            if victim is None:
+                break
+            del victim.parent.children[victim.key]
+            del self._by_page[victim.page]
+            self.alloc._reclaim_evicted(victim.page)
+            evicted += 1
+        self.evicted_pages += evicted
+        return evicted
+
+    # ------------------------------------------------------------- reports
+    def stats(self) -> Dict[str, int]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "cow_forks": self.cow_forks,
+            "cached_pages": self.cached_pages,
+            "inserted_pages": self.inserted_pages,
+            "evicted_pages": self.evicted_pages,
+        }

@@ -23,7 +23,18 @@ makes three kinds of decisions, all host-side and all against the
   evicted: its pages are reclaimed, and it re-enters the queue head with
   ``prompt + generated-so-far`` as its new prefill (recompute-style
   preemption — nothing is swapped out, greedy decode resumes exactly
-  where it left off).
+  where it left off).  With a prefix cache attached, cache *eviction*
+  always runs first (inside ``PageAllocator``): dropping an idle cached
+  page is strictly cheaper than recomputing a live request.
+
+With a :class:`~repro.serve.prefix_cache.PrefixCache` attached, admission
+additionally matches the prompt against the radix tree: matched full
+pages are mapped shared (refcounted) into the lane's block table, a
+mid-page match records a pending copy-on-write fork (the engine runs the
+device copy before the next prefill step), and the lane's prefill offset
+starts at the matched length — the batched ``prefill_chunk`` call then
+computes **only the unmatched suffix** (its per-request ``pos0`` offsets
+have carried arbitrary starts since PR 2).
 """
 
 from __future__ import annotations
@@ -33,7 +44,7 @@ from typing import Deque, List, Optional, Tuple
 
 import numpy as np
 
-from repro.serve.pages import PageAllocator
+from repro.serve.pages import PageAllocator, pages_for
 
 PrefillBatch = Tuple[np.ndarray, np.ndarray, np.ndarray,
                      List[Tuple[int, int]]]
@@ -42,7 +53,8 @@ PrefillBatch = Tuple[np.ndarray, np.ndarray, np.ndarray,
 class PagedScheduler:
     """Admission + prefill batching + preemption over ``n_slots`` lanes."""
 
-    def __init__(self, alloc: PageAllocator, chunk: int):
+    def __init__(self, alloc: PageAllocator, chunk: int,
+                 prefix_cache=None):
         self.alloc = alloc
         self.chunk = int(chunk)
         if self.chunk < 1:
@@ -52,6 +64,13 @@ class PagedScheduler:
         self.slot_req: List[Optional[object]] = [None] * self.n_slots
         self.preemptions = 0
         self._admit_seq = 0
+        self.prefix_cache = prefix_cache
+        # (src_page, dst_page) device copies the engine must run before
+        # the next prefill/decode step touches the forked pages
+        self.pending_forks: List[Tuple[int, int]] = []
+        # prefill tokens actually computed (the bench's ∝-unique-suffix
+        # gate reads this; cache hits keep it below total prompt tokens)
+        self.prefill_computed = 0
 
     # ------------------------------------------------------------- queue
     def submit(self, req) -> None:
@@ -63,22 +82,66 @@ class PagedScheduler:
 
     # --------------------------------------------------------- admission
     def admit(self) -> None:
-        """FCFS admission while a lane is free and capacity allows."""
+        """FCFS admission while a lane is free and capacity allows.
+
+        With a prefix cache: the head-of-queue prompt is matched against
+        the radix tree *before* the capacity check — shared full pages
+        cost nothing, so a request whose prefix is resident can be
+        admitted into a pool that could not hold its cold prefill.  Pages
+        for the whole (suffix) prefill plus one decode token are still
+        granted up front, so chunked prefill never allocates mid-flight.
+        """
         for slot in range(self.n_slots):
             if not self.queue:
                 return
             if self.slot_req[slot] is not None:
                 continue
             req = self.queue[0]
-            if not self.alloc.can_admit(len(req.prefill_tokens)):
+            toks = req.prefill_tokens
+            total = pages_for(len(toks) + 1, self.alloc.page_size)
+            # hopeless-case prefilter: even a best-case match (every full
+            # page shared) cannot fit — skip the tree walk + pin/rollback
+            # churn this head-of-line-blocked request would otherwise pay
+            # on every scheduler iteration until capacity frees
+            if not self.alloc.can_allocate(
+                    total - len(toks) // self.alloc.page_size):
+                return
+            match = None
+            if self.prefix_cache is not None:
+                match = self.prefix_cache.match(toks)
+            n_shared = len(match.full_pages) if match else 0
+            if n_shared:
+                # pin the matched pages (refcount++) *before* the capacity
+                # check: a refcount-0 cached page counts as evictable
+                # capacity, and a page about to be shared must not be
+                # promised to the eviction path as well
+                self.alloc.map_shared(slot, match.full_pages)
+            need = total - n_shared
+            if not self.alloc.can_allocate(need):
+                if n_shared:
+                    self.alloc.free_slot(slot)  # unpin; pages stay cached
                 return  # head-of-line blocks: keep arrival order
             self.queue.popleft()
             self.slot_req[slot] = req
-            req.prefill_pos = 0
             req.admit_seq = self._admit_seq
             self._admit_seq += 1
-            ok = self.alloc.ensure(slot, len(req.prefill_tokens) + 1)
-            assert ok, "can_admit granted but ensure failed"
+            matched = 0
+            if match is not None:
+                matched = match.matched_tokens
+                self.prefix_cache.hits += bool(matched)
+                self.prefix_cache.misses += not matched
+                self.prefix_cache.hit_tokens += matched
+                if match.partial is not None:
+                    dst = self.alloc.alloc_page(slot)
+                    assert dst is not None, \
+                        "can_allocate granted but fork allocation failed"
+                    self.pending_forks.append((match.partial[0], dst))
+                    self.prefix_cache.cow_forks += 1
+            req.prefill_pos = matched
+            req.cached_tokens = matched
+            self.alloc.pos[slot] = matched
+            ok = self.alloc.ensure(slot, len(toks) + 1)
+            assert ok, "can_allocate granted but ensure failed"
 
     # ----------------------------------------------------------- prefill
     def prefill_batch(self, audio_codebooks: int = 0
@@ -103,6 +166,7 @@ class PagedScheduler:
             pos0[slot] = req.prefill_pos
             seq_lens[slot] = req.prefill_pos + n_real
             lanes.append((slot, n_real))
+            self.prefill_computed += n_real
         if not lanes:
             return None
         if audio_codebooks > 1:  # one EnCodec token broadcast per codebook
@@ -163,8 +227,10 @@ class PagedScheduler:
         self.alloc.free_slot(slot)
         self.slot_req[slot] = None
         # recompute-style: everything generated so far becomes prefill
+        # (a resident prefix in the cache will be re-matched at re-admission)
         req.prefill_tokens = list(req.prompt) + list(req.output)
         req.prefill_pos = 0
+        req.cached_tokens = 0
         req.last_logits = None
         req.preemptions += 1
         self.preemptions += 1

@@ -44,6 +44,16 @@ class strategies:
     def floats(min_value, max_value):
         return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
+    @staticmethod
+    def tuples(*strats):
+        return _Strategy(lambda rng: tuple(s.sample(rng) for s in strats))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elements.sample(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
 
 def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
     def deco(fn):

@@ -179,33 +179,14 @@ def test_resolve_plan_memoized():
     assert as_plan(p1) is p1  # plans pass through untouched
 
 
-def test_resolve_plan_legacy_use_pallas_false():
-    from repro.engine.plan import _resolve_cached
-
-    _resolve_cached.cache_clear()  # memoization would swallow the warning
-    with pytest.warns(DeprecationWarning, match="use_pallas is deprecated"):
-        plan = resolve_plan(EngineConfig(weight_bits=4, use_pallas=False))
-    assert plan.backend == "reference"
-
-
-def test_use_pallas_warns_only_when_influential():
-    """The deprecation warning fires only when the legacy knob actually
-    changes plan resolution — an explicit backend or the default
-    use_pallas=True stay silent (the PR-1 shim can be deleted at the next
-    re-anchor once nothing trips this)."""
-    import warnings
-
-    from repro.engine.plan import _resolve_cached
-
-    _resolve_cached.cache_clear()
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        # explicit backend: use_pallas=False is ignored, no warning
-        plan = resolve_plan(EngineConfig(weight_bits=4, use_pallas=False,
-                                         backend="reference"))
-        assert plan.backend == "reference"
-        # default knob value: nothing legacy happening
-        resolve_plan(EngineConfig(weight_bits=4, backend="bit_serial"))
+def test_engine_config_has_no_use_pallas():
+    """The deprecated ``EngineConfig.use_pallas`` knob is gone (removed at
+    the scheduled re-anchor): passing it is a ``TypeError``, and dispatch
+    is named solely by ``backend``.  (The ``gemv(use_pallas=)`` *call*
+    shim in ``core.gemv_engine`` is a separate surface and remains.)"""
+    with pytest.raises(TypeError):
+        EngineConfig(weight_bits=4, use_pallas=False)
+    assert not hasattr(EngineConfig(), "use_pallas")
 
 
 def test_resolve_plan_auto_off_tpu():

@@ -57,7 +57,7 @@ def test_engine_bits_with_unstacked_cache(rng):
     cfg = reduced_f32("qwen2.5-3b")
     p = init_params(cfg, rng)
     q8 = quantize_params(p, cfg, 8)
-    eng = EngineConfig(weight_bits=8, use_pallas=False)
+    eng = EngineConfig(weight_bits=8, backend="reference")
     c1 = init_cache(cfg, 2, max_len=10, stacked=False)
     c2 = init_cache(cfg, 2, max_len=10, stacked=False)
     o1, o2 = _roll(cfg, [p, q8], [c1, c2], [None, eng])
@@ -70,7 +70,7 @@ def test_full_imagine_mode(rng):
     cfg = reduced_f32("gemma3-27b")
     p = init_params(cfg, rng)
     q8 = quantize_params(p, cfg, 8)
-    eng = EngineConfig(weight_bits=8, kv_bits=8, use_pallas=False)
+    eng = EngineConfig(weight_bits=8, kv_bits=8, backend="reference")
     c1 = init_cache(cfg, 2, max_len=10, stacked=False)
     c2 = init_cache(cfg, 2, max_len=10, stacked=False, kv_bits=8)
     o1, o2 = _roll(cfg, [p, q8], [c1, c2], [None, eng])

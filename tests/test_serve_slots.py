@@ -156,3 +156,35 @@ def test_slot_reuse_resets_state(arch):
     assert first.done and second.done
     assert second.output == expected.output, (
         second.output, expected.output)
+
+
+# --------------------------------------------------- mode="auto" fallback
+@pytest.mark.parametrize("arch,family", [("mamba2-130m", "ssm"),
+                                         ("zamba2-7b", "hybrid")])
+def test_auto_fallback_to_slots_warns_with_family(arch, family, caplog):
+    """ssm/hybrid families fall back from mode="auto" to the fixed-slot
+    engine — loudly, naming the family, so the capability gap (ROADMAP:
+    paged serving for the hybrid family) is visible in server logs
+    instead of silently degrading."""
+    import logging
+
+    cfg, params = _mk(arch)
+    with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+        eng = _engine(cfg, params, None, scfg=ServeConfig(max_new_tokens=2))
+    assert eng.mode == "slots"
+    msgs = [r.message for r in caplog.records
+            if "falling back to mode='slots'" in r.message]
+    assert msgs and repr(family) in msgs[0], caplog.records
+
+
+def test_auto_paged_family_does_not_warn(caplog):
+    """Attention families resolve mode="auto" to paged with no fallback
+    warning in the logs."""
+    import logging
+
+    cfg, params = _mk("qwen2.5-3b")
+    with caplog.at_level(logging.WARNING, logger="repro.serve.engine"):
+        eng = _engine(cfg, params, None, scfg=ServeConfig(max_new_tokens=2))
+    assert eng.mode == "paged"
+    assert not [r for r in caplog.records
+                if "falling back" in r.message]

@@ -143,7 +143,7 @@ class TestServing:
             return sorted(eng.run(), key=lambda r: r.rid)
 
         dense = gen(EngineConfig())
-        quant = gen(EngineConfig(weight_bits=8, use_pallas=False))
+        quant = gen(EngineConfig(weight_bits=8, backend="reference"))
         # free-running generation compounds: once quantization noise flips
         # one low-margin token the suffix legitimately diverges.  Assert
         # the pre-divergence behaviour: every request opens on the dense
@@ -166,7 +166,7 @@ class TestQuantizedParams:
         qparams = quantize_params(params, cfg, bits)
         toks = jax.random.randint(jax.random.PRNGKey(0), (2, 16), 0,
                                   cfg.vocab_size)
-        eng = EngineConfig(weight_bits=bits, use_pallas=False)
+        eng = EngineConfig(weight_bits=bits, backend="reference")
         lg_d, _ = forward(params, {"tokens": toks}, cfg, remat="none")
         lg_q, _ = forward(qparams, {"tokens": toks}, cfg, eng, remat="none")
         agree = float(jnp.mean(
@@ -193,7 +193,7 @@ class TestQuantizedParams:
                      "qwen3-moe-235b-a22b", "musicgen-medium"):
             cfg, params = _mk(arch, seed=6, capacity_factor=8.0)
             qparams = quantize_params(params, cfg, 8)
-            eng = EngineConfig(weight_bits=8, use_pallas=False)
+            eng = EngineConfig(weight_bits=8, backend="reference")
             cache = init_cache(cfg, 2, max_len=8)
             shape = ((2, 1, cfg.n_codebooks) if cfg.family == "audio"
                      else (2, 1))
