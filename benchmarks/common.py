@@ -1,0 +1,72 @@
+"""Shared model/engine setup for the serving benchmarks.
+
+``serve_bench``, ``prefix_bench`` and ``load_bench`` all start from the
+same place: a reduced float32 model with seeded params, and a
+``ServeEngine`` sized for the workload.  Keeping that here means a
+change to the reduced configs or engine signature touches one file,
+and every bench bills identical one-time costs (imports, param init).
+
+Import pattern (the benches run both as scripts and via
+``python -m benchmarks.run``)::
+
+    try:
+        from benchmarks.common import build_model, make_engine, tree_bytes
+    except ImportError:          # executed as a loose script
+        from common import build_model, make_engine, tree_bytes
+"""
+
+import dataclasses
+
+
+def build_model(arch: str):
+    """Reduced ``arch`` config forced to float32 + seeded params."""
+    import jax
+
+    from repro.config import get_reduced
+    from repro.models import init_params
+
+    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
+                max_new=8, kv_bits=0, page_size=8, prefill_chunk=16,
+                n_pages=0, prefix_cache=False, sched="fcfs",
+                step_tokens=0, max_queue=0, warm=True):
+    """A ``ServeEngine`` with the bench-standard knobs, optionally with
+    the jits warmed on a tiny throwaway request (so compilation is never
+    billed to the first mode measured)."""
+    from repro.config.base import EngineConfig, ServeConfig
+    from repro.serve import ServeEngine
+
+    scfg = ServeConfig(
+        max_new_tokens=max_new,
+        engine=EngineConfig(kv_bits=kv_bits, backend="reference"),
+        page_size=page_size, prefill_chunk=prefill_chunk, n_pages=n_pages,
+        sched=sched, step_tokens=step_tokens, max_queue=max_queue)
+    eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
+                      mode=mode, prefix_cache=prefix_cache)
+    if warm:
+        eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
+        eng.run()
+    return eng
+
+
+def tree_bytes(t):
+    """Total bytes held by the array leaves of a pytree."""
+    import jax
+
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(t)
+               if hasattr(l, "dtype"))
+
+
+def percentile(xs, q):
+    """Linear-interpolation percentile of a non-empty list (q in 0..100)."""
+    ys = sorted(xs)
+    if not ys:
+        return None
+    pos = (len(ys) - 1) * q / 100.0
+    lo = int(pos)
+    hi = min(lo + 1, len(ys) - 1)
+    return ys[lo] + (ys[hi] - ys[lo]) * (pos - lo)

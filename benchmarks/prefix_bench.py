@@ -29,20 +29,13 @@ Results land in ``BENCH_prefix.json`` plus repo-standard CSV rows.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 
-
-def _build(arch: str):
-    import jax
-
-    from repro.config import get_reduced
-    from repro.models import init_params
-
-    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, params
+try:
+    from benchmarks.common import build_model, make_engine
+except ImportError:  # executed as a loose script
+    from common import build_model, make_engine
 
 
 def _workload(cfg, n_reqs: int, prefix_len: int, suffix_len: int):
@@ -61,17 +54,11 @@ def _workload(cfg, n_reqs: int, prefix_len: int, suffix_len: int):
 def _serve(cfg, params, cached: bool, batch: int, primer, prompts,
            max_new: int, max_len: int, page_size: int = 8,
            prefill_chunk: int = 16):
-    from repro.config.base import EngineConfig, ServeConfig
-    from repro.serve import ServeEngine
-
-    scfg = ServeConfig(
-        max_new_tokens=max_new, engine=EngineConfig(backend="reference"),
-        page_size=page_size, prefill_chunk=prefill_chunk)
-    eng = ServeEngine(cfg, params, scfg, n_slots=batch, max_len=max_len,
-                      mode="paged", prefix_cache=cached)
-    # warm the jits on a disjoint token range (never matches the prefix)
-    eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
-    eng.run()
+    # the warm request uses a disjoint token range (never matches the
+    # prefix), so it cannot seed the radix tree with workload pages
+    eng = make_engine(cfg, params, n_slots=batch, max_len=max_len,
+                      max_new=max_new, page_size=page_size,
+                      prefill_chunk=prefill_chunk, prefix_cache=cached)
 
     t0 = time.perf_counter()
     eng.submit(list(primer), max_new_tokens=1)
@@ -110,7 +97,7 @@ def run(batches=(2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
     """Bench entry point (also registered in benchmarks.run).  Returns the
     repo-standard (name, us_per_call, derived) CSV rows."""
     assert prefix_len % page_size == 0, "keep the shared prefix page-aligned"
-    cfg, params = _build(arch)
+    cfg, params = build_model(arch)
     max_len = prefix_len + suffix_len + max_new + 8
     # warm process-level state for both paths (imports, jit infra, the
     # prefix-cache host structures) so the first measured engine does not

@@ -16,6 +16,7 @@ def main() -> None:
         fig4_scaling,
         fig6_latency,
         kernel_bench,
+        load_bench,
         prefix_bench,
         roofline_summary,
         serve_bench,
@@ -36,6 +37,7 @@ def main() -> None:
         "serve": serve_bench.run,
         "attn": attn_bench.run,
         "prefix": prefix_bench.run,
+        "load": load_bench.run,
     }
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

@@ -18,27 +18,13 @@ entry of the bench trajectory) plus the repo-standard CSV rows on stdout.
 """
 
 import argparse
-import dataclasses
 import json
 import time
 
-
-def _build(arch: str):
-    import jax
-
-    from repro.config import get_reduced
-    from repro.models import init_params
-
-    cfg = dataclasses.replace(get_reduced(arch), dtype="float32")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    return cfg, params
-
-
-def _tree_bytes(t):
-    import jax
-
-    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(t)
-               if hasattr(l, "dtype"))
+try:
+    from benchmarks.common import build_model, make_engine, tree_bytes
+except ImportError:  # executed as a loose script
+    from common import build_model, make_engine, tree_bytes
 
 
 def _workload(cfg, batch: int, n_reqs: int, prompt_len: int,
@@ -53,19 +39,12 @@ def _workload(cfg, batch: int, n_reqs: int, prompt_len: int,
 def _serve(cfg, params, mode: str, batch: int, prompts, max_new: int,
            max_len: int, kv_bits: int = 0, page_size: int = 8,
            prefill_chunk: int = 16, n_pages: int = 0):
-    from repro.config.base import EngineConfig, ServeConfig
-    from repro.serve import ServeEngine
-
-    scfg = ServeConfig(
-        max_new_tokens=max_new,
-        engine=EngineConfig(kv_bits=kv_bits, backend="reference"),
-        page_size=page_size, prefill_chunk=prefill_chunk, n_pages=n_pages)
-    eng = ServeEngine(cfg, params, scfg, n_slots=batch, max_len=max_len,
-                      mode=mode)
-    # warm the jits (fresh closures per engine would otherwise bill
-    # compilation to the first mode measured)
-    eng.submit(prompts[0][:4], max_new_tokens=2)
-    eng.run()
+    # warm=True: fresh closures per engine would otherwise bill
+    # compilation to the first mode measured
+    eng = make_engine(cfg, params, n_slots=batch, max_len=max_len,
+                      mode=mode, max_new=max_new, kv_bits=kv_bits,
+                      page_size=page_size, prefill_chunk=prefill_chunk,
+                      n_pages=n_pages)
 
     for p in prompts:
         eng.submit(p)
@@ -77,7 +56,7 @@ def _serve(cfg, params, mode: str, batch: int, prompts, max_new: int,
     pre = sum(len(r.prompt) for r in done)
     ttfts = [r.ttft for r in done if r.ttft is not None]
     kv_bytes = (eng.pages.nbytes() if mode == "paged"
-                else _tree_bytes(eng.cache))
+                else tree_bytes(eng.cache))
     outputs = {r.rid: r.output for r in done}
     return {
         "mode": mode + (f"_kv{kv_bits}" if kv_bits else ""),
@@ -99,7 +78,7 @@ def run(batches=(1, 2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
         with_kv8: bool = True, out: str = "BENCH_serve.json"):
     """Bench entry point (also registered in benchmarks.run).  Returns the
     repo-standard (name, us_per_call, derived) CSV rows."""
-    cfg, params = _build(arch)
+    cfg, params = build_model(arch)
     results, rows = [], []
     identical = True
     for batch in batches:

@@ -21,7 +21,7 @@ from repro.config import get_reduced
 from repro.config.base import EngineConfig, ServeConfig, TrainConfig
 from repro.data import DataPipeline
 from repro.models import init_params
-from repro.serve import ServeEngine
+from repro.serve import ServeEngine, ServeFrontend
 from repro.train import Trainer
 
 
@@ -103,6 +103,40 @@ def main():
         total = sum(len(r.output) for r in results[label])
         print(f"{label}: greedy agreement with slots-dense = "
               f"{agree}/{total}")
+
+    # --- streaming front-end: tokens as they are produced, SLA-aware ---
+    # the budget scheduler interleaves chunked prefill with decode under
+    # a per-step token budget; priorities get weighted fair shares; the
+    # bounded queue sheds overload with a reason instead of queueing it
+    print("\n== streaming front-end (budget scheduler, bounded queue) ==")
+    eng = ServeEngine(
+        cfg, params,
+        ServeConfig(max_new_tokens=args.tokens, engine=EngineConfig(),
+                    page_size=8, prefill_chunk=8,
+                    sched="budget", step_tokens=12, max_queue=3),
+        n_slots=2, max_len=64, mode="paged", prefix_cache=True)
+    fe = ServeFrontend(eng)
+    streams = [
+        fe.submit(prompts[0], priority="interactive", tenant="app"),
+        fe.submit(prompts[1], priority="batch", tenant="etl"),
+        fe.submit(prompts[2], priority="default", deadline_s=30.0),
+    ]
+    # the admission queue (max_queue=3) is full -> the 4th sheds at the
+    # door with a reason instead of growing the tail unboundedly
+    shed = fe.submit(prompts[3])
+    print(f"  shed stream: state={shed.state!r} "
+          f"reason={shed.shed_reason!r} (no exception on the hot path)")
+    # pull tokens incrementally, round-robin — each next() drives the
+    # shared engine, so all lanes advance together
+    for s in streams:
+        first = next(s)
+        print(f"  stream rid={s.rid} [{s.req.priority}] first token "
+              f"{first} after {1e3 * s.ttft():.0f}ms (state={s.state})")
+    for s in streams:
+        s.result()  # drain the rest
+    fe.drain()
+    print(f"  done: {[len(s.tokens) for s in fe.streams]} tokens/stream, "
+          f"{fe.shed_count} shed, {fe.timeout_count} timed out")
 
 
 if __name__ == "__main__":

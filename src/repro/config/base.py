@@ -342,6 +342,16 @@ class ServeConfig:
     ``prefix_cache``: share KV pages across requests through the
     radix-tree prefix cache (``repro.serve.prefix_cache``) — matched
     prompt prefixes skip prefill entirely; paged mode only.
+    ``sched``: ``"fcfs"`` (arrival-order admission, unbudgeted prefill)
+    or ``"budget"`` (SLA-aware: per-step token budget interleaving
+    chunked prefill with decode, priority classes with weighted
+    fair-share accounting across tenants; paged mode only).
+    ``step_tokens``: per-step token budget for ``sched="budget"``
+    (prefill + decode tokens per scheduler step); 0 derives
+    ``n_slots + prefill_chunk``.
+    ``max_queue``: bounded admission queue — ``submit`` rejects with
+    :class:`repro.serve.engine.AdmissionRejected` when this many
+    requests are already waiting; 0 = unbounded (never sheds).
     """
 
     max_new_tokens: int = 32
@@ -353,6 +363,9 @@ class ServeConfig:
     n_pages: int = 0                  # 0 = full capacity (never preempts)
     prefill_chunk: int = 32
     prefix_cache: bool = False        # radix-tree KV reuse (paged only)
+    sched: str = "fcfs"               # fcfs | budget (SLA-aware)
+    step_tokens: int = 0              # 0 = n_slots + prefill_chunk
+    max_queue: int = 0                # 0 = unbounded admission queue
 
     def __post_init__(self):
         if self.mode not in ("auto", "paged", "slots"):
@@ -362,6 +375,13 @@ class ServeConfig:
         if self.prefill_chunk < 1:
             raise ValueError(
                 f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.sched not in ("fcfs", "budget"):
+            raise ValueError(f"sched must be fcfs/budget, got {self.sched}")
+        if self.step_tokens < 0:
+            raise ValueError(
+                f"step_tokens must be >= 0, got {self.step_tokens}")
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
 
 
 @dataclass(frozen=True)

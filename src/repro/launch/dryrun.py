@@ -34,6 +34,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
              attn_backend: str = "auto",
              engine_sharded: bool = False, psum_bits: int = 0,
              split_local: bool = False, paged: bool = False,
+             chunked_prefill: bool = False,
              remat: str = "block",
              microbatches: int = 1, grad_compress_bits: int = 0,
              out_dir: str = "experiments/dryrun", tag: str = "") -> dict:
@@ -73,7 +74,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = mesh.devices.size
     kw = ({"split_local": split_local, "paged": paged}
-          if shape.kind == "decode" else {})
+          if shape.kind == "decode"
+          else {"chunked": chunked_prefill}
+          if shape.kind == "prefill" else {})
 
     from repro.dist import use_mesh
 
@@ -98,7 +101,9 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     cache_bytes = 0.0
     if kind in ("decode", "prefill"):
-        cache_abs = args[2] if kind == "prefill" else args[1]
+        # chunked prefill passes the paged pool at args[1], like decode
+        cache_abs = (args[2] if kind == "prefill" and not chunked_prefill
+                     else args[1])
         if isinstance(cache_abs, dict):
             leaves = [l for k, sub in cache_abs.items() if k != "pos"
                       for l in jax.tree.leaves(sub)]
@@ -127,6 +132,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         "psum_bits": psum_bits,
         "split_local": split_local,
         "paged": paged,
+        "chunked_prefill": chunked_prefill,
         "remat": remat,
         "microbatches": microbatches,
         "grad_compress_bits": grad_compress_bits,
@@ -154,6 +160,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         name += "__paged"
         if attn_backend != "auto":
             name += f"__attn-{attn_backend}"
+    if chunked_prefill:
+        name += "__chunked"
     if tag:
         name += f"__{tag}"
     path = os.path.join(out_dir, name + ".json")
@@ -192,6 +200,10 @@ def main():
     ap.add_argument("--split-local", action="store_true")
     ap.add_argument("--paged", action="store_true",
                     help="lower the paged-KV block-table decode cell")
+    ap.add_argument("--chunked-prefill", action="store_true",
+                    help="lower the scheduler's per-step chunked-prefill "
+                         "cell (paged pool + per-lane pos0/seq_lens) "
+                         "instead of one-shot prefill")
     ap.add_argument("--remat", default="block")
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--grad-compress-bits", type=int, default=0)
@@ -204,6 +216,7 @@ def main():
              attn_backend=args.attn_backend,
              engine_sharded=args.engine_sharded, psum_bits=args.psum_bits,
              split_local=args.split_local, paged=args.paged,
+             chunked_prefill=args.chunked_prefill,
              remat=args.remat,
              microbatches=args.microbatches,
              grad_compress_bits=args.grad_compress_bits,

@@ -28,7 +28,7 @@ from repro.dist.sharding import (
 )
 from repro.engine import resolve_attn_backend, resolve_plan
 from repro.models import decode_step, decode_step_paged, init_cache, init_params
-from repro.models.transformer import prefill, quantize_params
+from repro.models.transformer import prefill, prefill_chunk, quantize_params
 from repro.serve.pages import init_kv_pages, pages_for
 from repro.optim import make_optimizer
 from repro.train.trainer import make_train_step
@@ -108,6 +108,50 @@ def prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
         donate_argnums=(2,),
     )
     return fn, (ap_sh, abatch_sh, acache_sh)
+
+
+def chunked_prefill_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
+    """The serving-path prefill: one batched chunk of prompt prefill
+    against the paged page pool — exactly what the paged/budget
+    schedulers lower per engine step.  Lanes carry independent
+    ``pos0``/``seq_lens`` (a 30k-token prompt is sliced across many of
+    these calls while other lanes decode), so this one compiled cell
+    covers every admission mix the scheduler can produce."""
+    cfg, shape = run.model, run.shape
+    # resolved once per cell, mesh pinned (sharded backends shard_map it)
+    plan = resolve_plan(run.serve.engine, mesh=mesh)
+    bits = plan.bits if plan else 0
+    ap_sh = sharded_abstract_params(cfg, mesh, bits)
+
+    kv_bits = plan.kv_bits if plan else 0
+    b = shape.global_batch
+    page_size = run.serve.page_size
+    chunk = run.serve.prefill_chunk
+    n_blocks = pages_for(shape.seq_len, page_size)
+    n_pages = pool_pages_for_mesh(
+        run.serve.n_pages or b * n_blocks + 1, mesh)
+    apages = jax.eval_shape(functools.partial(
+        init_kv_pages, cfg, n_pages, page_size, kv_bits=kv_bits))
+    apages_sh = _attach(apages, cache_shardings(mesh, apages))
+
+    # host-built index state: lane axis over the data axes
+    tok_shape = ((b, chunk, cfg.n_codebooks) if cfg.family == "audio"
+                 else (b, chunk))
+    aidx = {
+        "block_tables": jax.ShapeDtypeStruct((b, n_blocks), jnp.int32),
+        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        "pos0": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "seq_lens": jax.ShapeDtypeStruct((b,), jnp.int32),
+    }
+    aidx_sh = _attach(aidx, batch_shardings(mesh, aidx))
+
+    fn = jax.jit(
+        lambda params, pages, bt, tokens, pos0, seq_lens: prefill_chunk(
+            params, pages, bt, tokens, pos0, seq_lens, cfg, plan),
+        donate_argnums=(1,),
+    )
+    return fn, (ap_sh, apages_sh, aidx_sh["block_tables"],
+                aidx_sh["tokens"], aidx_sh["pos0"], aidx_sh["seq_lens"])
 
 
 def paged_serve_cell(run: RunConfig, mesh) -> Tuple[Any, Tuple]:
@@ -198,7 +242,10 @@ def build_cell(run: RunConfig, mesh, **kw) -> Tuple[Any, Tuple, str]:
     if kind == "train":
         fn, args = train_cell(run, mesh)
     elif kind == "prefill":
-        fn, args = prefill_cell(run, mesh)
+        if kw.pop("chunked", False):
+            fn, args = chunked_prefill_cell(run, mesh)
+        else:
+            fn, args = prefill_cell(run, mesh, **kw)
     elif kind == "decode":
         fn, args = serve_cell(run, mesh, **kw)
     else:

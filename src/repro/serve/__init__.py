@@ -1,11 +1,14 @@
-"""Serving: paged-KV continuous batching (pages + scheduler + engine).
+"""Serving: paged-KV continuous batching (pages + scheduler + engine)
+plus the async streaming front-end.
 
-``ServeEngine`` is the front door; ``KVPages`` / ``PageAllocator`` /
-``PagedScheduler`` are the paged-cache building blocks (see
-``docs/serving.md``).
+``ServeEngine`` is the batch-loop core; ``ServeFrontend`` /
+``TokenStream`` are the streaming surface over it; ``KVPages`` /
+``PageAllocator`` / ``PagedScheduler`` / ``BudgetScheduler`` are the
+paged-cache building blocks (see ``docs/serving.md``).
 """
 
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import AdmissionRejected, Request, ServeEngine
+from repro.serve.frontend import ServeFrontend, TokenStream
 from repro.serve.pages import (
     KVPages,
     PageAllocator,
@@ -15,15 +18,24 @@ from repro.serve.pages import (
 )
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampler import sample
-from repro.serve.scheduler import PagedScheduler
+from repro.serve.scheduler import (
+    PRIORITY_WEIGHTS,
+    BudgetScheduler,
+    PagedScheduler,
+)
 
 __all__ = [
+    "AdmissionRejected",
+    "BudgetScheduler",
     "KVPages",
+    "PRIORITY_WEIGHTS",
     "PageAllocator",
     "PagedScheduler",
     "PrefixCache",
     "Request",
     "ServeEngine",
+    "ServeFrontend",
+    "TokenStream",
     "fork_tail_page",
     "init_kv_pages",
     "pages_for",

@@ -61,12 +61,35 @@ from repro.serve.pages import (
 )
 from repro.serve.prefix_cache import PrefixCache
 from repro.serve.sampler import sample
-from repro.serve.scheduler import PagedScheduler
+from repro.serve.scheduler import (
+    PRIORITY_WEIGHTS,
+    BudgetScheduler,
+    PagedScheduler,
+)
 
 logger = logging.getLogger(__name__)
 
 
-@dataclasses.dataclass
+class AdmissionRejected(RuntimeError):
+    """Load shedding: ``submit`` refused the request outright.
+
+    ``reason``: ``"queue_full"`` (bounded admission queue at capacity) or
+    ``"pool_too_small"`` (the prompt can never fit the page pool — waiting
+    would deadlock behind eviction+preemption).  Rejecting at the door
+    keeps the admitted requests' latency bounded under overload; the
+    caller (or :class:`repro.serve.frontend.ServeFrontend`) decides
+    whether to retry, degrade, or surface the error.
+    """
+
+    def __init__(self, reason: str):
+        super().__init__(reason)
+        self.reason = reason
+
+
+# eq=False: a Request is an identity (queue membership, slot residency and
+# cancellation all compare by ``is``); field-wise dataclass equality would
+# even crash comparing the ndarray ``last_logits``
+@dataclasses.dataclass(eq=False)
 class Request:
     rid: int
     prompt: List[int]
@@ -87,6 +110,12 @@ class Request:
     cached_tokens: int = 0
     # time-to-first-token relative to ``run()`` start (benchmarks)
     ttft: Optional[float] = None
+    # --- SLA / front-end state --------------------------------------
+    priority: str = "default"         # interactive | default | batch
+    tenant: str = "default"           # fair-share accounting key part
+    cancelled: bool = False           # terminal, but not successfully done
+    # "length" | "cancelled" | "timed_out" (None while running)
+    finish_reason: Optional[str] = None
 
     # deprecated alias (pre-paged code set this attribute dynamically)
     @property
@@ -222,10 +251,20 @@ class ServeEngine:
                 raise ValueError(
                     "prefix_cache shares KV *pages* across requests; "
                     "mode='slots' has no page pool to share")
+        if self.scfg.sched == "budget" and mode != "paged":
+            if not auto_fallback:
+                raise ValueError(
+                    "sched='budget' interleaves chunked prefill with "
+                    "decode under a token budget; mode='slots' prefills "
+                    "synchronously and has no scheduler to budget")
+            logger.warning(
+                "ServeEngine: sched='budget' ignored in mode='slots' "
+                "(fixed-slot fallback runs FCFS)")
 
         self.queue: Deque[Request] = collections.deque()
         self._next_rid = 0
         self._run_t0 = 0.0
+        self.shed_count = 0  # AdmissionRejected raises since construction
 
         cfg_ = self.cfg
         plan_ = self.plan
@@ -254,8 +293,19 @@ class ServeEngine:
             if prefix_cache:
                 self.prefix_cache = PrefixCache(self.alloc)
                 self.alloc.attach_cache(self.prefix_cache)
-            self.sched = PagedScheduler(self.alloc, self.prefill_chunk,
-                                        prefix_cache=self.prefix_cache)
+            if self.scfg.sched == "budget":
+                # default budget: every lane decodes plus one full prefill
+                # chunk per step — decode-first with steady prefill progress
+                step_tokens = (self.scfg.step_tokens
+                               or n_slots + self.prefill_chunk)
+                self.sched = BudgetScheduler(
+                    self.alloc, self.prefill_chunk,
+                    prefix_cache=self.prefix_cache,
+                    step_tokens=step_tokens)
+            else:
+                self.sched = PagedScheduler(
+                    self.alloc, self.prefill_chunk,
+                    prefix_cache=self.prefix_cache)
             # lane-state shardings are computed once: block tables and
             # positions always enter the device under their mesh placement
             self._table_shardings = None
@@ -302,8 +352,16 @@ class ServeEngine:
             self._step = _step
 
     # ------------------------------------------------------------------ API
-    def submit(self, prompt: List[int], max_new_tokens: Optional[int] = None
+    def submit(self, prompt: List[int], max_new_tokens: Optional[int] = None,
+               *, priority: str = "default", tenant: str = "default"
                ) -> Request:
+        """Enqueue a prompt; returns its :class:`Request` handle.
+
+        Raises ``ValueError`` for malformed prompts (caller bugs) and
+        :class:`AdmissionRejected` for load shedding (the bounded queue
+        is full, or the prompt can never fit the page pool) — transient,
+        retriable conditions a front-end turns into ``shed`` streams.
+        """
         prompt = list(prompt)
         if not prompt:
             # an empty prompt leaves nothing to condition on (the old
@@ -317,16 +375,49 @@ class ServeEngine:
                 f"prompt of {len(prompt)} tokens cannot fit max_len="
                 f"{self.max_len} with room to generate (limit is "
                 f"max_len - 2 = {self.max_len - 2})")
+        if priority not in PRIORITY_WEIGHTS:
+            raise ValueError(
+                f"unknown priority {priority!r}; choose from "
+                f"{sorted(PRIORITY_WEIGHTS)}")
+        queue = self.sched.queue if self.mode == "paged" else self.queue
+        if self.scfg.max_queue and len(queue) >= self.scfg.max_queue:
+            self.shed_count += 1
+            raise AdmissionRejected("queue_full")
+        if (self.mode == "paged"
+                and pages_for(len(prompt) + 1, self.page_size)
+                > self.alloc.n_pages - 1):
+            # unreachable via the max_len check for sane pool sizes, but
+            # a request that can never be granted must not sit in the
+            # queue deadlocking everything behind eviction+preemption
+            self.shed_count += 1
+            raise AdmissionRejected("pool_too_small")
         req = Request(self._next_rid, prompt,
                       self.scfg.max_new_tokens if max_new_tokens is None
-                      else max_new_tokens)
+                      else max_new_tokens,
+                      priority=priority, tenant=tenant)
         req.prefill_tokens = list(prompt)
         self._next_rid += 1
-        if self.mode == "paged":
-            self.sched.submit(req)
-        else:
-            self.queue.append(req)
+        queue.append(req)
         return req
+
+    def has_work(self) -> bool:
+        """Anything queued or resident?"""
+        if self.mode == "paged":
+            return self.sched.has_work()
+        return bool(self.queue) or any(
+            r is not None for r in self.slot_req)
+
+    def step(self) -> List[Request]:
+        """One scheduler iteration (admit → prefill chunk → decode token →
+        retire); returns the requests that finished this step.  The unit
+        the streaming front-end drives — ``run()`` is just this in a
+        loop."""
+        if not self._run_t0:
+            self._run_t0 = time.perf_counter()
+        with self._mesh_ctx():
+            if self.mode == "paged":
+                return self._step_paged()
+            return self._step_slots()
 
     def run(self) -> List[Request]:
         """Drive until queue + slots drain; returns completed requests."""
@@ -334,10 +425,66 @@ class ServeEngine:
         # the mesh context makes the model-internal sharding hints live
         # (they are no-ops off-mesh); device placement itself was pinned at
         # construction via param/cache shardings.
+        finished: List[Request] = []
         with self._mesh_ctx():
-            if self.mode == "paged":
-                return self._run_paged()
-            return self._run_slots()
+            step = (self._step_paged if self.mode == "paged"
+                    else self._step_slots)
+            while self.has_work():
+                finished.extend(step())
+        return finished
+
+    def cancel(self, req: Request, reason: str = "cancelled") -> bool:
+        """Terminate a request *now*, wherever it is in its lifecycle.
+
+        Queued: dropped from the queue.  Resident (mid-prefill or
+        decoding): its pages are released immediately — including
+        prefix-cache pins taken at admission and any partially-filled
+        private pages of a chunked prefill — and pending copy-on-write
+        forks are discarded before their dst page can be reused.  Tokens
+        generated so far stay on ``req.output``.  Returns False if the
+        request already reached a terminal state."""
+        if req.done or req.cancelled:
+            return False
+        req.cancelled = True
+        req.finish_reason = reason
+        if self.mode == "paged":
+            for slot, r in enumerate(self.sched.slot_req):
+                if r is req:
+                    self.sched.drop_forks(slot)
+                    self.alloc.free_slot(slot)
+                    self.sched.slot_req[slot] = None
+                    return True
+            try:
+                self.sched.queue.remove(req)
+            except ValueError:
+                pass  # between retire bookkeeping and caller: already out
+            return True
+        for slot, r in enumerate(self.slot_req):
+            if r is req:
+                self.slot_req[slot] = None
+                return True
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            pass
+        return True
+
+    def request_phase(self, req: Request) -> str:
+        """Lifecycle phase: ``queued`` | ``prefilling`` | ``decoding`` |
+        ``done`` | ``cancelled`` (the front-end refines ``cancelled``
+        into cancelled/timed-out via ``finish_reason``)."""
+        if req.done:
+            return "done"
+        if req.cancelled:
+            return "cancelled"
+        slots = self.sched.slot_req if self.mode == "paged" else self.slot_req
+        for r in slots:
+            if r is req:
+                if (req.last_logits is None
+                        or req.prefill_pos < len(req.prefill_tokens)):
+                    return "prefilling"
+                return "decoding"
+        return "queued"
 
     def _mesh_ctx(self):
         if self.mesh is None:
@@ -359,23 +506,22 @@ class ServeEngine:
                 if self.prefix_cache is not None else None)
 
     # ================================================== paged internals
-    def _run_paged(self) -> List[Request]:
+    def _step_paged(self) -> List[Request]:
         finished: List[Request] = []
-        while self.sched.has_work():
-            self.sched.admit()
-            self._apply_forks()
-            self._prefill_once()
-            # pre-decode retire: max_new_tokens=0 must emit no tokens
-            finished.extend(self._retire_paged(limit_only=True))
-            self._decode_once_paged()
-            finished.extend(self._retire_paged())
+        self.sched.admit()
+        self._apply_forks()
+        self._prefill_once()
+        # pre-decode retire: max_new_tokens=0 must emit no tokens
+        finished.extend(self._retire_paged(limit_only=True))
+        self._decode_once_paged()
+        finished.extend(self._retire_paged())
         return finished
 
     def _apply_forks(self) -> None:
         """Run the device copies of pending copy-on-write forks (mid-page
         cache hits recorded at admission) before anything reads or writes
         the forked pages."""
-        for src, dst in self.sched.pending_forks:
+        for _slot, src, dst in self.sched.pending_forks:
             self.pages = fork_tail_page(
                 self.pages, jnp.int32(src), jnp.int32(dst))
         self.sched.pending_forks.clear()
@@ -423,6 +569,7 @@ class ServeEngine:
         ready = [(s, r) for s, r in ready if self.sched.slot_req[s] is r]
         if not ready:
             return
+        self.sched.charge_decode(ready)
         updates: Dict[int, int] = {}
         for slot, req in ready:
             tok = self._sample_next(req)
@@ -447,20 +594,21 @@ class ServeEngine:
                 continue
             if self._should_retire(req, limit_only):
                 req.done = True
+                req.finish_reason = "length"
                 done.append(req)
+                self.sched.drop_forks(slot)
                 self.alloc.free_slot(slot)
                 self.sched.slot_req[slot] = None
         return done
 
     # ================================================== slots internals
-    def _run_slots(self) -> List[Request]:
+    def _step_slots(self) -> List[Request]:
         finished: List[Request] = []
-        while self.queue or any(r is not None for r in self.slot_req):
-            self._admit()
-            # pre-decode retire: max_new_tokens=0 must emit no tokens
-            finished.extend(self._retire(limit_only=True))
-            self._decode_one()
-            finished.extend(self._retire())
+        self._admit()
+        # pre-decode retire: max_new_tokens=0 must emit no tokens
+        finished.extend(self._retire(limit_only=True))
+        self._decode_one()
+        finished.extend(self._retire())
         return finished
 
     def _admit(self):
@@ -581,6 +729,7 @@ class ServeEngine:
                 continue
             if self._should_retire(req, limit_only):
                 req.done = True
+                req.finish_reason = "length"
                 done.append(req)
                 self.slot_req[slot] = None
         return done

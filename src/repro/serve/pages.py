@@ -261,6 +261,12 @@ class PageAllocator:
             if page == NULL_PAGE:
                 raise ValueError("cannot share the null page")
             self.refcount[page] += 1
+            if (self.refcount[page] == 1 and self._cache is not None
+                    and self._cache.holds(page)):
+                # 0 -> 1: the cached page leaves the evictable set.  The
+                # shared prefix pins root-first, so each node's parent is
+                # already pinned and the cache's upward walk is O(1).
+                self._cache._on_pin(page)
             self._mapped[slot].append(page)
             self.block_tables[slot, blk] = page
 
@@ -294,9 +300,14 @@ class PageAllocator:
         self.refcount[page] -= 1
         if self.refcount[page] < 0:
             raise AssertionError(f"page {page} refcount went negative")
-        if self.refcount[page] == 0 and not (
-                self._cache is not None and self._cache.holds(page)):
-            self.free.append(page)
+        if self.refcount[page] == 0:
+            if self._cache is not None and self._cache.holds(page):
+                # 1 -> 0: stays resident, re-enters the evictable set.
+                # ``free_slot`` releases deepest-first, so each node's
+                # parent is still pinned and the upward walk is O(1).
+                self._cache._on_unpin(page)
+            else:
+                self.free.append(page)
 
     def _reclaim_evicted(self, page: int) -> None:
         """Return an evicted cache-resident page (refcount already 0) to

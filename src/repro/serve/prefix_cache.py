@@ -46,6 +46,7 @@ pool they index does.
 
 from __future__ import annotations
 
+import heapq
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -78,9 +79,18 @@ class MatchResult:
 
 class _Node:
     """One cached full page: key = its page_size token ids, value = the
-    physical page id.  Children are the pages that extend this prefix."""
+    physical page id.  Children are the pages that extend this prefix.
 
-    __slots__ = ("children", "parent", "key", "page", "last_used")
+    ``blocked_children`` counts children that are *blocked* — pinned
+    (refcount > 0) or with blocked descendants of their own.  A node is
+    evictable-in-place exactly when it is unblocked (refcount 0 and
+    ``blocked_children == 0``): its whole subtree could drain leaf-first.
+    The cache maintains these counts incrementally so ``evictable_count``
+    is O(1) instead of a full-tree walk per admission check.
+    """
+
+    __slots__ = ("children", "parent", "key", "page", "last_used",
+                 "blocked_children")
 
     def __init__(self, parent: Optional["_Node"],
                  key: Optional[Tuple[int, ...]], page: int):
@@ -89,6 +99,7 @@ class _Node:
         self.key = key
         self.page = page
         self.last_used = 0
+        self.blocked_children = 0
 
 
 class PrefixCache:
@@ -106,6 +117,14 @@ class PrefixCache:
         self.root = _Node(None, None, NULL_PAGE)
         self._by_page: Dict[int, _Node] = {}
         self._clock = 0
+        # incrementally maintained eviction state: ``_blocked`` counts
+        # non-root nodes that are pinned or have blocked descendants (so
+        # evictable_count = cached - blocked, O(1)); ``_lru`` is a lazy
+        # min-heap of (last_used, page) eviction candidates — entries are
+        # validated (and re-queued if merely stale) at pop time instead
+        # of being repaired on every touch.
+        self._blocked = 0
+        self._lru: List[Tuple[int, int]] = []
         # counters (surfaced by ServeEngine.prefix_stats / the bench)
         self.hits = 0            # admissions with matched_tokens > 0
         self.misses = 0          # admissions with no match
@@ -113,6 +132,9 @@ class PrefixCache:
         self.cow_forks = 0       # mid-page matches (one page copy each)
         self.inserted_pages = 0
         self.evicted_pages = 0
+        # the allocator must notify refcount 0<->1 transitions of cached
+        # pages (attach is idempotent; explicit re-attach stays legal)
+        alloc.attach_cache(self)
 
     # ------------------------------------------------------------- basics
     def _tick(self) -> int:
@@ -126,6 +148,50 @@ class PrefixCache:
     @property
     def cached_pages(self) -> int:
         return len(self._by_page)
+
+    # -------------------------------------------- incremental block state
+    def _is_blocked(self, node: _Node) -> bool:
+        return (node.blocked_children > 0
+                or self.alloc.refcount[node.page] > 0)
+
+    def _mark_blocked(self, node: _Node) -> None:
+        """``node`` just transitioned unblocked -> blocked; bubble the
+        change up, stopping at the first ancestor whose own status does
+        not flip (amortized O(1): the pin/unpin orders the allocator
+        guarantees make the very first ancestor the stop in the common
+        case)."""
+        while True:
+            self._blocked += 1
+            parent = node.parent
+            already = self._is_blocked(parent)
+            parent.blocked_children += 1
+            if parent is self.root or already:
+                return
+            node = parent
+
+    def _mark_unblocked(self, node: _Node) -> None:
+        """Mirror of :meth:`_mark_blocked` for blocked -> unblocked."""
+        while True:
+            self._blocked -= 1
+            if not node.children:
+                heapq.heappush(self._lru, (node.last_used, node.page))
+            parent = node.parent
+            parent.blocked_children -= 1
+            if parent is self.root or self._is_blocked(parent):
+                return
+            node = parent
+
+    def _on_pin(self, page: int) -> None:
+        """Allocator hook: a cached page's refcount went 0 -> 1."""
+        node = self._by_page[page]
+        if node.blocked_children == 0:  # was unblocked; now pinned
+            self._mark_blocked(node)
+
+    def _on_unpin(self, page: int) -> None:
+        """Allocator hook: a cached page's refcount went 1 -> 0."""
+        node = self._by_page[page]
+        if node.blocked_children == 0:  # no blocked subtree: unblocks
+            self._mark_unblocked(node)
 
     # ------------------------------------------------------------ matching
     def match(self, tokens) -> MatchResult:
@@ -196,6 +262,12 @@ class PrefixCache:
                 child = _Node(node, key, page)
                 node.children[key] = child
                 self._by_page[page] = child
+                child.last_used = self._tick()
+                if self.alloc.refcount[page] > 0:
+                    self._mark_blocked(child)  # pinned by its inserter
+                else:
+                    heapq.heappush(self._lru,
+                                   (child.last_used, child.page))
                 new += 1
             child.last_used = self._tick()
             node = child
@@ -208,6 +280,22 @@ class PrefixCache:
         (themselves included) is refcount-0 — exactly the pages a
         leaf-first eviction loop could drain.  Exactness matters: the
         scheduler's capacity-based admission counts these as available.
+
+        O(1): ``cached - blocked``, where the blocked count is maintained
+        incrementally on refcount 0<->1 transitions (allocator hooks) and
+        insert/evict — this runs on *every* capacity check once the free
+        list is short, so a full-tree walk per call melts admission
+        throughput at production tree sizes.
+        (:meth:`_recount_evictable` keeps the old walk as the
+        property-test oracle.)
+        """
+        return len(self._by_page) - self._blocked
+
+    def _recount_evictable(self) -> int:
+        """Recompute :meth:`evictable_count` from scratch — the original
+        full-tree walk, kept as the correctness oracle for the
+        incremental counter (``tests/test_prefix_cache.py`` asserts they
+        agree after random op sequences).
 
         Iterative post-order (a long prompt is one deep chain — one node
         per page — so recursion would hit Python's stack limit at a few
@@ -241,22 +329,36 @@ class PrefixCache:
         """Evict up to ``n_pages`` refcount-0 cached pages, LRU leaf-first,
         returning them to the allocator's free list.  Never touches a page
         with live references and never the null page.  Returns the number
-        actually evicted."""
+        actually evicted.
+
+        Victims pop off the lazy LRU heap in O(log n) instead of the old
+        O(tree) scan per victim: entries are (last_used, page) snapshots,
+        so a popped entry is *validated* against live state — gone,
+        re-parented under children, or re-pinned means discard; merely
+        touched since queueing means re-queue at its new age.  Evicting a
+        leaf may expose its parent as the next candidate; it is pushed
+        here rather than tracked on every touch.
+        """
         ref = self.alloc.refcount
         evicted = 0
-        while evicted < n_pages:
-            victim = None
-            for node in self._by_page.values():
-                if node.children or ref[node.page] != 0:
-                    continue
-                if victim is None or node.last_used < victim.last_used:
-                    victim = node
-            if victim is None:
-                break
-            del victim.parent.children[victim.key]
-            del self._by_page[victim.page]
-            self.alloc._reclaim_evicted(victim.page)
+        while evicted < n_pages and self._lru:
+            last_used, page = heapq.heappop(self._lru)
+            node = self._by_page.get(page)
+            if node is None or node.children or ref[page] != 0:
+                continue  # stale: evicted already / interior / re-pinned
+            if node.last_used != last_used:
+                heapq.heappush(self._lru, (node.last_used, page))
+                continue  # touched since queued: contend at its new age
+            parent = node.parent
+            del parent.children[node.key]
+            del self._by_page[page]
+            # victims are unblocked by construction, so the blocked count
+            # and every ancestor's blocked_children are already correct
+            self.alloc._reclaim_evicted(page)
             evicted += 1
+            if (parent is not self.root and not parent.children
+                    and ref[parent.page] == 0):
+                heapq.heappush(self._lru, (parent.last_used, parent.page))
         self.evicted_pages += evicted
         return evicted
 
@@ -270,4 +372,5 @@ class PrefixCache:
             "cached_pages": self.cached_pages,
             "inserted_pages": self.inserted_pages,
             "evicted_pages": self.evicted_pages,
+            "evictable": self.evictable_count(),
         }

@@ -1,0 +1,297 @@
+"""Async streaming front-end (``repro.serve.frontend``).
+
+Pins the tentpole claims: streamed tokens are identical to the
+synchronous batch loop's for the same seeds (streaming changes *when*,
+never *which*); streams progress through the documented lifecycle
+states; cancellation and deadline timeout release pages **and
+prefix-cache pins immediately** — mid-chunked-prefill included — with
+the allocator invariants intact (the PR 5 pin-before-capacity-check
+path assumed admission either completed or was refused); and the
+bounded admission queue sheds with a reason instead of deadlocking.
+"""
+
+import numpy as np
+import pytest
+
+from repro.config.base import EngineConfig, ServeConfig
+from repro.models import init_params
+from repro.serve import AdmissionRejected, ServeEngine, ServeFrontend
+from repro.serve.frontend import (
+    CANCELLED,
+    DECODING,
+    DONE,
+    QUEUED,
+    SHED,
+    TIMED_OUT,
+)
+
+from conftest import reduced_f32
+
+PROMPTS = [[1, 2, 3], [4], [5, 6], [7, 8, 9, 10]]
+
+
+class ManualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def _engine(cfg, params, *, sched="fcfs", n_slots=2, max_len=64,
+            max_new=5, prefix_cache=False, **scfg_kw):
+    scfg = ServeConfig(max_new_tokens=max_new, sched=sched,
+                       prefix_cache=prefix_cache,
+                       engine=EngineConfig(backend="reference"), **scfg_kw)
+    return ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
+                       mode="paged", page_size=4, prefill_chunk=3)
+
+
+def _alloc_clean(eng):
+    """Post-drain allocator hygiene: no references, no mapped pages, and
+    every page either free or cache-resident."""
+    alloc = eng.alloc
+    assert alloc.refcount.sum() == 0
+    assert (alloc.refcount >= 0).all()
+    assert all(not m for m in alloc._mapped)
+    cached = eng.prefix_cache.cached_pages if eng.prefix_cache else 0
+    assert alloc.free_pages == alloc.n_pages - 1 - cached
+    if eng.prefix_cache is not None:
+        assert (eng.prefix_cache.evictable_count()
+                == eng.prefix_cache._recount_evictable())
+
+
+# -------------------------------------------------------------- identity
+@pytest.mark.parametrize("sched", ["fcfs", "budget"])
+@pytest.mark.parametrize("prefix_cache", [False, True])
+def test_streamed_tokens_identical_to_batch(rng, sched, prefix_cache):
+    """Token-identity gate: iterating streams (which interleaves engine
+    steps with consumption) yields exactly the synchronous ``run()``
+    output, under both schedulers, with and without the prefix cache."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    prompts = PROMPTS + [list(PROMPTS[0]), [2, 2, 2, 2, 2]]
+
+    ref_eng = _engine(cfg, params, prefix_cache=prefix_cache)
+    refs = [ref_eng.submit(list(p)) for p in prompts]
+    ref_eng.run()
+
+    eng = _engine(cfg, params, sched=sched, prefix_cache=prefix_cache)
+    fe = ServeFrontend(eng)
+    streams = [fe.submit(list(p)) for p in prompts]
+    # consume streams round-robin, one token at a time — the adversarial
+    # interleaving for a "streaming changed the tokens" bug
+    iters = [iter(s) for s in streams]
+    collected = [[] for _ in streams]
+    pending = set(range(len(streams)))
+    while pending:
+        for i in sorted(pending):
+            try:
+                collected[i].append(next(iters[i]))
+            except StopIteration:
+                pending.discard(i)
+    for i, (ref, got) in enumerate(zip(refs, collected)):
+        assert ref.output == got, (sched, prefix_cache, i)
+        assert streams[i].state == DONE
+    _alloc_clean(eng)
+
+
+# ------------------------------------------------------------- lifecycle
+def test_stream_states_and_incremental_delivery(rng):
+    """States walk queued -> prefilling -> decoding -> done, and tokens
+    arrive incrementally (first token observable while the request is
+    still decoding), with a single lane forcing real queueing."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = _engine(cfg, params, n_slots=1, max_new=6)
+    fe = ServeFrontend(eng)
+    first = fe.submit(list(range(1, 9)), max_new_tokens=6)
+    second = fe.submit([50, 51], max_new_tokens=2)
+    assert first.state == QUEUED and second.state == QUEUED
+
+    seen_states = set()
+    token_observations = []
+    while not first.finished:
+        fe.step()
+        seen_states.add(first.state)
+        token_observations.append(len(first.tokens))
+        if first.state == DECODING:
+            assert second.state == QUEUED  # single lane: second waits
+    assert seen_states >= {DECODING, DONE}
+    # incremental: tokens were visible before the stream finished
+    assert any(0 < n < 6 for n in token_observations), token_observations
+    assert first.tokens == first.req.output and len(first.tokens) == 6
+    assert first.ttft() is not None and first.ttft() >= 0
+
+    fe.drain()
+    assert second.state == DONE and len(second.tokens) == 2
+    _alloc_clean(eng)
+
+
+def test_shed_when_queue_full(rng):
+    """Bounded admission queue: overflow submissions come back as
+    terminal ``shed`` streams with a reason; admitted work completes
+    untouched; a shed stream iterates as empty."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = _engine(cfg, params, n_slots=1, max_new=2, max_queue=2)
+    fe = ServeFrontend(eng)
+    streams = [fe.submit([10 + i], max_new_tokens=2) for i in range(6)]
+    shed = [s for s in streams if s.state == SHED]
+    live = [s for s in streams if s.state != SHED]
+    # admission happens inside step(), so submits only queue: 2 fit the
+    # bounded queue, the other 4 shed at the door
+    assert len(shed) == 4 and fe.shed_count == 4
+    assert all(s.shed_reason == "queue_full" for s in shed)
+    assert all(list(s) == [] for s in shed)  # iterates empty, no hang
+    fe.drain()
+    assert all(s.state == DONE and len(s.tokens) == 2 for s in live)
+    assert eng.shed_count == 4
+    _alloc_clean(eng)
+
+
+def test_pool_too_small_is_shed_not_deadlock(rng):
+    """A prompt that can *never* be granted must shed at the door, not
+    sit in the queue deadlocking everything behind eviction+preemption.
+    The allocator constructor refuses genuinely undersized pools, so the
+    guard is defense-in-depth — simulate a shrunken pool to pin it."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = _engine(cfg, params, n_slots=2, max_len=96, max_new=2)
+    eng.alloc.n_pages = 9   # pretend only 8 usable pages exist
+    fe = ServeFrontend(eng)
+    s = fe.submit(list(range(60)))          # needs 16 pages: hopeless
+    assert s.state == SHED and s.shed_reason == "pool_too_small"
+    with pytest.raises(AdmissionRejected, match="pool_too_small"):
+        eng.submit(list(range(60)))
+    ok = fe.submit([1, 2, 3])               # 1 page: fine
+    fe.drain()
+    assert ok.state == DONE
+
+
+# ----------------------------------------------------------- cancellation
+def test_cancel_mid_prefill_releases_pages_and_pins(rng):
+    """THE satellite regression: a request cancelled mid-chunked-prefill
+    — after admission pinned shared prefix pages (refcount++), allocated
+    private pages, and queued a COW fork — must release everything
+    immediately: refcounts return to cache-only residency, the pending
+    fork is dropped before its dst page is reused, and the remaining
+    traffic's greedy output is unchanged."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+
+    warm = list(range(1, 13))                  # 3 full pages
+    forker = warm[:10] + [99, 100]             # 2 full + mid-page fork
+    bystander = [7, 8, 9]
+
+    ref_eng = _engine(cfg, params, prefix_cache=True, n_slots=2)
+    ref_eng.submit(list(warm))
+    ref_by = ref_eng.submit(list(bystander))
+    ref_eng.run()
+
+    eng = _engine(cfg, params, prefix_cache=True, n_slots=2)
+    fe = ServeFrontend(eng)
+    fe.submit(list(warm)).result()             # populate the cache
+    base_ref = eng.alloc.refcount.copy()
+    assert eng.prefix_cache.cached_pages == 3
+
+    victim = fe.submit(list(forker), max_new_tokens=8)
+    # admit + pin WITHOUT running the engine step: the fork is pending
+    # and the prefill has not advanced — the rawest mid-admission state
+    eng.sched.admit()
+    assert any(f[1] != f[2] for f in eng.sched.pending_forks)
+    assert eng.alloc.refcount.sum() > base_ref.sum()  # pins + privates
+
+    assert victim.cancel()
+    assert victim.state == CANCELLED
+    assert eng.sched.pending_forks == [], "cancel must drop queued forks"
+    # pins rolled back: refcounts exactly as before the victim arrived
+    np.testing.assert_array_equal(eng.alloc.refcount, base_ref)
+    assert (eng.prefix_cache.evictable_count()
+            == eng.prefix_cache._recount_evictable())
+
+    # second phase: cancel mid-prefill after a real step, with a
+    # bystander in the other lane — its stream must come out untouched
+    victim2 = fe.submit(list(forker), max_new_tokens=8)
+    by = fe.submit(list(bystander))
+    fe.step()
+    assert victim2.state in ("prefilling", "decoding")
+    assert victim2.cancel()
+    fe.drain()
+    assert by.state == DONE
+    assert by.tokens == ref_by.output, "bystander tokens disturbed"
+    # everything drained: refcounts back to cache-only residency
+    np.testing.assert_array_equal(eng.alloc.refcount, base_ref)
+    _alloc_clean(eng)
+
+
+def test_cancel_queued_and_decoding(rng):
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = _engine(cfg, params, n_slots=1, max_new=8)
+    fe = ServeFrontend(eng)
+    running = fe.submit([1, 2, 3], max_new_tokens=8)
+    queued = fe.submit([4, 5], max_new_tokens=8)
+    for tok in running:
+        if len(running.tokens) >= 2:
+            break
+    assert running.state == DECODING
+    assert queued.cancel() and queued.state == CANCELLED
+    got = len(running.tokens)
+    assert running.cancel()
+    assert running.state == CANCELLED
+    assert len(running.tokens) == got, "cancel must keep streamed tokens"
+    assert not fe.step()                       # nothing live remains
+    assert running.req.finish_reason == "cancelled"
+    _alloc_clean(eng)
+    # double-cancel is a no-op
+    assert not running.cancel()
+
+
+def test_deadline_timeout_releases_and_reports(rng):
+    """Deadlines on the injected clock: a request that cannot finish in
+    time is cancelled with state ``timed_out``, keeps its partial
+    tokens, frees its pages, and later requests proceed normally."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    clock = ManualClock()
+    eng = _engine(cfg, params, n_slots=2, max_new=50, max_len=64)
+    fe = ServeFrontend(eng, clock=clock)
+    doomed = fe.submit([1, 2, 3], max_new_tokens=50, deadline_s=5.0)
+    safe = fe.submit([4, 5, 6], max_new_tokens=3)
+    for _ in range(4):
+        fe.step()
+        clock.advance(1.0)
+    assert doomed.state in ("prefilling", "decoding")
+    partial = len(doomed.tokens)
+    clock.advance(10.0)                        # blow the deadline
+    fe.step()
+    assert doomed.state == TIMED_OUT
+    assert doomed.req.finish_reason == "timed_out"
+    assert len(doomed.tokens) >= partial
+    assert fe.timeout_count == 1
+    fe.drain()
+    assert safe.state == DONE and len(safe.tokens) == 3
+    _alloc_clean(eng)
+    # a queued request past its deadline times out without ever running
+    lane_hog = fe.submit([1] * 20, max_new_tokens=40)
+    lane_hog2 = fe.submit([2] * 20, max_new_tokens=40)
+    never = fe.submit([9, 9], deadline_s=0.5)
+    clock.advance(1.0)
+    fe.step()
+    assert never.state == TIMED_OUT and never.tokens == []
+
+
+# ------------------------------------------------------------ validation
+def test_submit_validation_still_raises(rng):
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    eng = _engine(cfg, params)
+    fe = ServeFrontend(eng)
+    with pytest.raises(ValueError, match="empty prompt"):
+        fe.submit([])
+    with pytest.raises(ValueError, match="priority"):
+        fe.submit([1], priority="urgent")

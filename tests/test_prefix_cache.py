@@ -313,6 +313,10 @@ def _check_invariants(alloc, cache):
             assert alloc.refcount[page] == 0 and not cache.holds(page)
     # no page mapped twice into one slot, none duplicated on the free list
     assert len(alloc.free) == len(set(alloc.free))
+    # the incrementally maintained evictable counter always agrees with a
+    # from-scratch recount (the pre-incremental full-tree walk)
+    assert cache.evictable_count() == cache._recount_evictable(), \
+        "incremental evictable counter drifted from the tree recount"
 
 
 @settings(max_examples=40)
@@ -344,6 +348,69 @@ def test_allocator_invariants_under_random_ops(ops):
             if m.full_pages and not alloc._mapped[slot]:
                 alloc.map_shared(slot, m.full_pages)
         _check_invariants(alloc, cache)
+
+
+@settings(max_examples=40)
+@given(ops=_OPS)
+def test_incremental_evictable_counter_matches_recount(ops):
+    """The O(1) evictable counter (blocked-subtree bookkeeping adjusted
+    on refcount 0<->1 transitions and insert/evict) equals the full-tree
+    recount after arbitrary op interleavings — including partial frees,
+    shared re-pins of interior pages, and evictions that expose parents.
+
+    Denser than the generic invariant test: two slots intentionally walk
+    the *same* token stream so shared pins exercise the 0<->1 hook on
+    interior nodes, not only leaves.
+    """
+    alloc = PageAllocator(n_pages=13, page_size=4, n_slots=3, max_len=24)
+    cache = PrefixCache(alloc)
+    shared = [300 + i for i in range(24)]
+    streams = [shared, shared, [900 + i for i in range(24)]]
+    for op, slot, n in ops:
+        if op == "ensure":
+            alloc.ensure(slot, min(n, 24))
+        elif op == "free":
+            alloc.free_slot(slot)
+        elif op == "insert":
+            toks = streams[slot][:min(n, 4 * len(alloc._mapped[slot]))]
+            cache.insert(toks, alloc.block_row(slot))
+        elif op == "evict":
+            cache.evict(n % 4 + 1)
+        elif op == "share":
+            m = cache.match(streams[slot])
+            if m.full_pages and not alloc._mapped[slot]:
+                alloc.map_shared(slot, m.full_pages)
+        assert cache.evictable_count() == cache._recount_evictable(), \
+            (op, slot, n)
+    # drain everything: counter must walk back to the empty-tree fixpoint
+    for slot in range(3):
+        alloc.free_slot(slot)
+    cache.evict(cache.cached_pages)
+    assert cache.cached_pages == 0
+    assert cache.evictable_count() == cache._recount_evictable() == 0
+
+
+def test_lru_heap_evicts_least_recently_used_first():
+    """The lazy heap preserves the old scan's LRU order: a re-matched
+    (touched) chain outlives an untouched one under partial eviction."""
+    alloc = PageAllocator(n_pages=17, page_size=4, n_slots=2, max_len=32)
+    cache = PrefixCache(alloc)
+    old_toks = [100 + i for i in range(8)]   # 2 pages, inserted first
+    new_toks = [500 + i for i in range(8)]
+    alloc.ensure(0, 9)
+    cache.insert(old_toks, alloc.block_row(0))
+    alloc.free_slot(0)
+    alloc.ensure(1, 9)
+    cache.insert(new_toks, alloc.block_row(1))
+    alloc.free_slot(1)
+    old_pages = [cache.match(old_toks + [1]).full_pages,
+                 cache.match(new_toks + [1]).full_pages]
+    # touch the *old* chain so it becomes most-recently-used
+    cache.match(old_toks + [7])
+    assert cache.evict(2) == 2
+    # the untouched (new) chain died; the touched one survived
+    assert all(cache.holds(int(p)) for p in old_pages[0])
+    assert not any(cache.holds(int(p)) for p in old_pages[1])
 
 
 @settings(max_examples=20)
