@@ -32,16 +32,11 @@ land in ``BENCH_attn.json``.
 
 import argparse
 import json
-import time
 
-
-def _time_call(fn, *args, reps=5, **kw):
-    fn(*args, **kw).block_until_ready()  # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args, **kw)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps
+try:
+    from benchmarks.common import time_call
+except ImportError:  # executed as a loose script
+    from common import time_call
 
 
 def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps):
@@ -70,7 +65,8 @@ def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps):
                      attend_paged_decode(q, kp, vp, bt, pos, 0,
                                          k_scale=ks, v_scale=vs,
                                          attn_backend=_b))
-        secs[backend] = _time_call(fn, q, kp, vp, bt, pos, reps=reps)
+        secs[backend] = time_call(fn, q, kp, vp, bt, pos, reps=reps,
+                                  name=f"attn_{backend}")
         outs[backend] = np.asarray(fn(q, kp, vp, bt, pos))
 
     tol = 2e-2 if kv_bits else 2e-5

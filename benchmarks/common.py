@@ -13,9 +13,64 @@ Import pattern (the benches run both as scripts and via
         from benchmarks.common import build_model, make_engine, tree_bytes
     except ImportError:          # executed as a loose script
         from common import build_model, make_engine, tree_bytes
+
+Timing goes through :func:`wall_timer` / :func:`time_call` — one
+implementation of the ``t0 = perf_counter(); ...; wall = ...`` block
+every bench used to hand-roll, which also feeds the walls into the
+``repro.obs`` global registry when observability is enabled.
 """
 
+import contextlib
 import dataclasses
+import time
+
+
+class _WallBox:
+    """Result box yielded by :func:`wall_timer`; ``.wall`` (seconds) is
+    set when the block exits."""
+
+    __slots__ = ("wall",)
+
+    def __init__(self):
+        self.wall = None
+
+
+@contextlib.contextmanager
+def wall_timer(name=None):
+    """Time a block of work::
+
+        with wall_timer("serve_b4") as w:
+            eng.run()
+        tok_per_s = gen / w.wall
+
+    When ``repro.obs`` is enabled the elapsed wall also lands in the
+    process-global metrics registry (histogram ``bench_wall_s`` labeled
+    by ``name``), so a traced bench run carries its own timing metrics.
+    """
+    box = _WallBox()
+    t0 = time.perf_counter()
+    try:
+        yield box
+    finally:
+        box.wall = time.perf_counter() - t0
+        if name is not None:
+            import repro.obs as obs
+            if obs.enabled:
+                obs.global_registry().histogram(
+                    "bench_wall_s", name=name).observe(box.wall)
+
+
+def time_call(fn, *args, reps=5, name=None, **kw):
+    """Mean per-call seconds for a jitted callable: one warm call
+    (compile), then ``reps`` timed calls bracketed by
+    ``block_until_ready`` — the rep-loop pattern the kernel benches
+    used to hand-roll."""
+    fn(*args, **kw).block_until_ready()  # compile + warm
+    with wall_timer(name) as w:
+        for _ in range(reps):
+            out = fn(*args, **kw)
+        out.block_until_ready()
+    return w.wall / reps
 
 
 def build_model(arch: str):
@@ -33,10 +88,12 @@ def build_model(arch: str):
 def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
                 max_new=8, kv_bits=0, page_size=8, prefill_chunk=16,
                 n_pages=0, prefix_cache=False, sched="fcfs",
-                step_tokens=0, max_queue=0, warm=True):
+                step_tokens=0, max_queue=0, warm=True, telemetry=None):
     """A ``ServeEngine`` with the bench-standard knobs, optionally with
     the jits warmed on a tiny throwaway request (so compilation is never
-    billed to the first mode measured)."""
+    billed to the first mode measured).  ``telemetry``: an explicit
+    ``repro.obs`` Telemetry/NullTelemetry for this engine (None defers
+    to the process-wide switch)."""
     from repro.config.base import EngineConfig, ServeConfig
     from repro.serve import ServeEngine
 
@@ -46,7 +103,8 @@ def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
         page_size=page_size, prefill_chunk=prefill_chunk, n_pages=n_pages,
         sched=sched, step_tokens=step_tokens, max_queue=max_queue)
     eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
-                      mode=mode, prefix_cache=prefix_cache)
+                      mode=mode, prefix_cache=prefix_cache,
+                      telemetry=telemetry)
     if warm:
         eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
         eng.run()

@@ -42,9 +42,12 @@ import random
 import time
 
 try:
-    from benchmarks.common import build_model, make_engine, percentile
+    from benchmarks.common import (build_model, make_engine, percentile,
+                                   wall_timer)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, percentile
+    from common import build_model, make_engine, percentile, wall_timer
+
+from repro.obs.clock import now as _now
 
 # priority-class mix: (priority, tenant, prompt_len_range, weight)
 CLASSES = [
@@ -84,10 +87,10 @@ def _drive(eng, work, arrivals, max_new: int):
     streams = []
     stall_now = {}  # stream -> consecutive stall steps
     stall_max = 0
-    t0 = time.perf_counter()
+    t0 = _now()
     i = 0
     while True:
-        now = time.perf_counter() - t0
+        now = _now() - t0
         while i < len(work) and arrivals[i] <= now:
             prompt, prio, tenant = work[i]
             streams.append(fe.submit(list(prompt), max_new_tokens=max_new,
@@ -107,7 +110,7 @@ def _drive(eng, work, arrivals, max_new: int):
             time.sleep(min(max(arrivals[i] - now, 0.0), 0.002))
         else:
             break
-    wall = time.perf_counter() - t0
+    wall = _now() - t0
     return fe, streams, wall, stall_max
 
 
@@ -189,10 +192,52 @@ def _identity_gate(cfg, params, work, n_slots, max_len, max_new):
     return True
 
 
+def _traced_run(cfg, params, n_slots, max_len, max_new, trace_path):
+    """Serve a shared-prefix workload through a fully-traced engine and
+    export + validate the Chrome trace (the observability CI gate rides
+    this): the trace must parse and carry per-lane prefill/decode spans
+    plus scheduler and prefix-cache events."""
+    import repro.obs as obs
+    from repro.obs.trace import (CACHE_TID, SCHED_TID, validate_trace)
+
+    tel = obs.Telemetry(trace=True)
+    eng = make_engine(cfg, params, n_slots=n_slots, max_len=max_len,
+                      max_new=max_new, sched="budget", prefix_cache=True,
+                      telemetry=tel)
+    # shared prefix (page-aligned at the default page_size=8) so the
+    # radix tree produces hit/insert events, not just misses
+    prefix = [(3 * j + 1) % cfg.vocab_size for j in range(16)]
+    eng.submit(prefix + [2], max_new_tokens=1)
+    eng.run()  # primes the tree
+    for i in range(2 * n_slots):
+        eng.submit(prefix + [(5 * i + 7) % cfg.vocab_size, 3])
+    eng.run()
+    tel.export_chrome_trace(trace_path)
+    track_counts = validate_trace(tel.tracer.export())
+    seen = {(e["tid"], e["name"]) for e in tel.tracer.events}
+    lane_prefill = any(t == 1 + s and n == "prefill"
+                       for t, n in seen for s in range(n_slots))
+    lane_decode = any(t == 1 + s and n == "decode"
+                      for t, n in seen for s in range(n_slots))
+    sched_events = any(t == SCHED_TID for t, _ in seen)
+    cache_events = any(t == CACHE_TID for t, _ in seen)
+    return {
+        "trace_file": trace_path,
+        "trace_events": len(tel.tracer.events),
+        "trace_tracks": track_counts,
+        "trace_valid": True,  # validate_trace raised otherwise
+        "has_lane_prefill_spans": bool(lane_prefill),
+        "has_lane_decode_spans": bool(lane_decode),
+        "has_scheduler_events": bool(sched_events),
+        "has_prefix_cache_events": bool(cache_events),
+        "prefix_cache": eng.metrics().get("prefix"),
+    }
+
+
 def run(rate_mults=(0.5, 1.0, 4.0), arch: str = "qwen2.5-3b",
         n_reqs: int = 32, n_slots: int = 4, max_new: int = 6,
         max_len: int = 128, seed: int = 0, n_identity: int = 8,
-        out: str = "BENCH_load.json"):
+        trace: str = None, out: str = "BENCH_load.json"):
     """Bench entry point (also registered in benchmarks.run).  Returns
     the repo-standard (name, us_per_call, derived) CSV rows."""
     cfg, params = build_model(arch)
@@ -257,6 +302,10 @@ def run(rate_mults=(0.5, 1.0, 4.0), arch: str = "qwen2.5-3b",
         "budget_p99_ttft_below_fcfs_at_peak": bool(tail_ok),
         "decode_stall_bounded": bool(stall_ok),
     }
+    if trace:
+        record["trace"] = _traced_run(cfg, params, n_slots, max_len,
+                                      max_new, trace)
+        print(f"# wrote {trace} ({record['trace']['trace_events']} events)")
     if out:
         with open(out, "w") as f:
             json.dump(record, f, indent=2)
@@ -270,14 +319,19 @@ def main():
                     help="CI-sized run: fewer requests, short generations")
     ap.add_argument("--n-reqs", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", nargs="?", const="trace_load.json",
+                    default=None,
+                    help="also export + validate a Chrome trace of a "
+                         "traced serve run (Perfetto-loadable JSON)")
     ap.add_argument("--out", default="BENCH_load.json")
     args = ap.parse_args()
 
     if args.smoke:
         rows = run(n_reqs=args.n_reqs or 24, max_new=5, n_identity=6,
-                   seed=args.seed, out=args.out)
+                   seed=args.seed, trace=args.trace, out=args.out)
     else:
-        rows = run(n_reqs=args.n_reqs or 48, seed=args.seed, out=args.out)
+        rows = run(n_reqs=args.n_reqs or 48, seed=args.seed,
+                   trace=args.trace, out=args.out)
     print("name,us_per_call,derived")
     for row in rows:
         print(",".join(str(v) for v in row))
@@ -291,6 +345,14 @@ def main():
     if args.smoke and not record["budget_p99_ttft_below_fcfs_at_peak"]:
         raise SystemExit(
             "budget scheduler p99 TTFT not below FCFS at peak load")
+    if args.trace:
+        tr = record["trace"]
+        missing = [k for k in ("has_lane_prefill_spans",
+                               "has_lane_decode_spans",
+                               "has_scheduler_events",
+                               "has_prefix_cache_events") if not tr[k]]
+        if missing:
+            raise SystemExit(f"exported trace is incomplete: {missing}")
     peak = record["workload"]["rate_mults"][-1]
     at = {r["sched"]: r for r in record["results"]
           if r["load_mult"] == peak}

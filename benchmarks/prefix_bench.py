@@ -30,12 +30,11 @@ Results land in ``BENCH_prefix.json`` plus repo-standard CSV rows.
 
 import argparse
 import json
-import time
 
 try:
-    from benchmarks.common import build_model, make_engine
+    from benchmarks.common import build_model, make_engine, wall_timer
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine
+    from common import build_model, make_engine, wall_timer
 
 
 def _workload(cfg, n_reqs: int, prefix_len: int, suffix_len: int):
@@ -60,26 +59,29 @@ def _serve(cfg, params, cached: bool, batch: int, primer, prompts,
                       max_new=max_new, page_size=page_size,
                       prefill_chunk=prefill_chunk, prefix_cache=cached)
 
-    t0 = time.perf_counter()
-    eng.submit(list(primer), max_new_tokens=1)
-    eng.run()  # priming completes (and, when cached, populates the tree)
-    computed0 = eng.prefill_computed
-    for p in prompts:
-        eng.submit(list(p))
-    done = eng.run()
-    wall = time.perf_counter() - t0
+    mode = "prefix" if cached else "nocache"
+    with wall_timer(f"{mode}_b{batch}") as w:
+        eng.submit(list(primer), max_new_tokens=1)
+        eng.run()  # priming completes (and, when cached, populates the tree)
+        computed0 = eng.prefill_computed
+        for p in prompts:
+            eng.submit(list(p))
+        done = eng.run()
+    wall = w.wall
 
     done = [r for r in done]
     gen = sum(len(r.output) for r in done)
     ttfts = [r.ttft for r in done if r.ttft is not None]
-    stats = eng.prefix_stats() or {}
+    metrics = eng.metrics()
+    stats = metrics.get("prefix") or {}
     return {
-        "mode": "prefix" if cached else "nocache",
+        "mode": mode,
         "batch": batch,
         "requests": len(done) + 1,  # + primer
         "prompt_tokens": len(primer) + sum(len(p) for p in prompts),
-        "prefill_computed": int(eng.prefill_computed),
-        "prefill_computed_batch": int(eng.prefill_computed - computed0),
+        "prefill_computed": int(metrics["prefill_computed"]),
+        "prefill_computed_batch": int(metrics["prefill_computed"]
+                                      - computed0),
         "gen_tokens": gen,
         "wall_s": round(wall, 4),
         "tok_per_s": round(gen / wall, 2) if wall > 0 else 0.0,
@@ -87,7 +89,7 @@ def _serve(cfg, params, cached: bool, batch: int, primer, prompts,
         "hit_tokens": int(stats.get("hit_tokens", 0)),
         "cow_forks": int(stats.get("cow_forks", 0)),
         "cached_pages": int(stats.get("cached_pages", 0)),
-        "preemptions": eng.preemptions,
+        "preemptions": metrics["preemptions"],
     }, {r.rid: r.output for r in done}
 
 

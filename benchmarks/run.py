@@ -17,6 +17,7 @@ def main() -> None:
         fig6_latency,
         kernel_bench,
         load_bench,
+        obs_bench,
         prefix_bench,
         roofline_summary,
         serve_bench,
@@ -38,6 +39,7 @@ def main() -> None:
         "attn": attn_bench.run,
         "prefix": prefix_bench.run,
         "load": load_bench.run,
+        "obs": obs_bench.run,
     }
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")

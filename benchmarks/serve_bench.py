@@ -19,12 +19,12 @@ entry of the bench trajectory) plus the repo-standard CSV rows on stdout.
 
 import argparse
 import json
-import time
 
 try:
-    from benchmarks.common import build_model, make_engine, tree_bytes
+    from benchmarks.common import (build_model, make_engine, tree_bytes,
+                                   wall_timer)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, tree_bytes
+    from common import build_model, make_engine, tree_bytes, wall_timer
 
 
 def _workload(cfg, batch: int, n_reqs: int, prompt_len: int,
@@ -48,9 +48,9 @@ def _serve(cfg, params, mode: str, batch: int, prompts, max_new: int,
 
     for p in prompts:
         eng.submit(p)
-    t0 = time.perf_counter()
-    done = eng.run()
-    wall = time.perf_counter() - t0
+    with wall_timer(f"serve_{mode}_b{batch}") as w:
+        done = eng.run()
+    wall = w.wall
 
     gen = sum(len(r.output) for r in done)
     pre = sum(len(r.prompt) for r in done)
@@ -69,7 +69,7 @@ def _serve(cfg, params, mode: str, batch: int, prompts, max_new: int,
         "tok_per_s": round(gen / wall, 2) if wall > 0 else 0.0,
         "ttft_mean_s": round(sum(ttfts) / len(ttfts), 4) if ttfts else None,
         "kv_bytes": int(kv_bytes),
-        "preemptions": eng.preemptions,
+        "preemptions": eng.metrics()["preemptions"],
     }, outputs
 
 

@@ -30,7 +30,6 @@ import argparse
 import dataclasses
 import json
 import os
-import time
 
 N_DEV = int(os.environ.get("SHARD_BENCH_DEVICES", "8"))
 if "xla_force_host_platform_device_count" not in os.environ.get(
@@ -54,10 +53,13 @@ def _build(arch: str):
 def _serve(cfg, params, prompts, *, mesh=None, max_new: int, n_slots: int,
            max_len: int = 64, engine=None, page_size: int = 8,
            prefill_chunk: int = 16):
-    import time as _t
-
     from repro.config.base import EngineConfig, ServeConfig
     from repro.serve import ServeEngine
+
+    try:
+        from benchmarks.common import wall_timer
+    except ImportError:  # executed as a loose script
+        from common import wall_timer
 
     scfg = ServeConfig(max_new_tokens=max_new,
                        engine=engine or EngineConfig(),
@@ -68,9 +70,10 @@ def _serve(cfg, params, prompts, *, mesh=None, max_new: int, n_slots: int,
     eng.run()
     for p in prompts:
         eng.submit(p)
-    t0 = _t.perf_counter()
-    done = eng.run()
-    wall = _t.perf_counter() - t0
+    mesh_tag = "1dev" if mesh is None else "x".join(map(str, mesh.devices.shape))
+    with wall_timer(f"shard_serve_{mesh_tag}") as w:
+        done = eng.run()
+    wall = w.wall
     gen = sum(len(r.output) for r in done)
     return {
         "gen_tokens": gen,

@@ -12,11 +12,11 @@ greedy-token agreement across modes.
 
 import argparse
 import dataclasses
-import time
 
 import jax
 import jax.numpy as jnp
 
+import repro.obs as obs
 from repro.config import get_reduced
 from repro.config.base import EngineConfig, ServeConfig, TrainConfig
 from repro.data import DataPipeline
@@ -36,6 +36,10 @@ def main():
     ap.add_argument("--reqs", type=int, default=6)
     ap.add_argument("--train-steps", type=int, default=20)
     args = ap.parse_args()
+
+    # observability on for the whole driver: every engine below carries a
+    # live telemetry (metrics + Chrome trace); docs/observability.md
+    obs.enable()
 
     cfg = dataclasses.replace(get_reduced("qwen2.5-3b"), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -70,20 +74,22 @@ def main():
             ServeConfig(max_new_tokens=args.tokens, engine=engine,
                         page_size=8, prefill_chunk=8),
             n_slots=4, max_len=64, mode=mode, prefix_cache=prefix_cache)
-        t0 = time.perf_counter()
         for p in prompts:
             eng.submit(p)
         done = eng.run()
-        dt = time.perf_counter() - t0
+        # no hand-rolled perf_counter math: the engine's own telemetry
+        # already timed every step
+        m = eng.metrics()
+        dt = m["obs"]["metrics"]["histograms"]["serve_step_s"]["sum"]
         wbytes = tree_bytes(eng.params)
         kvbytes = (eng.pages.nbytes() if mode == "paged"
                    else tree_bytes(eng.cache))
         results[label] = done
-        extra = (f", preemptions={eng.preemptions}" if mode == "paged"
+        extra = (f", preemptions={m['preemptions']}" if mode == "paged"
                  else "")
         if eng.prefix_cache is not None:
-            st = eng.prefix_stats()
-            extra += (f", prefill computed {eng.prefill_computed} tokens "
+            st = m["prefix"]
+            extra += (f", prefill computed {m['prefill_computed']} tokens "
                       f"({st['hit_tokens']} from cache, "
                       f"{st['cow_forks']} COW forks)")
         print(f"== {label}: {len(done)} requests, {dt:.1f}s, "
@@ -137,6 +143,27 @@ def main():
     fe.drain()
     print(f"  done: {[len(s.tokens) for s in fe.streams]} tokens/stream, "
           f"{fe.shed_count} shed, {fe.timeout_count} timed out")
+
+    # --- the observability surface this run produced ---
+    snap = eng.metrics()
+    o = snap["obs"]["metrics"]
+    ttft = o["histograms"]["serve_ttft_s"]
+    print("\n== ServeEngine.metrics() snapshot (streaming engine) ==")
+    print(f"  steps={snap['obs']['steps']}  "
+          f"request_states={snap['obs']['request_states']}")
+    for k in ("serve_requests_submitted_total",
+              "serve_tokens_generated_total",
+              "serve_prefill_tokens_total",
+              'serve_requests_shed_total{reason="queue_full"}',
+              "prefix_cache_hits_total"):
+        if k in o["counters"]:
+            print(f"  {k} = {o['counters'][k]}")
+    print(f"  serve_ttft_s: count={ttft['count']} p50={ttft['p50']:.4f}s "
+          f"max={ttft['max']:.4f}s")
+    trace_path = eng.obs.export_chrome_trace("serve_trace.json")
+    print(f"  Chrome trace -> {trace_path} "
+          f"(load it at https://ui.perfetto.dev)")
+    obs.disable()
 
 
 if __name__ == "__main__":

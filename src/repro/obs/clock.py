@@ -1,0 +1,20 @@
+"""The serve-path clock: the only place ``time.perf_counter`` may live.
+
+Everything under ``repro.serve`` reads time through :func:`now` (or an
+injected callable defaulting to it) — CI greps the serve package for raw
+``perf_counter`` calls.  Centralizing the clock keeps every timestamp in
+the stack (request TTFT, span timelines, Chrome-trace ``ts`` fields) on
+one monotonic timebase, and makes the whole serving layer testable with
+a manual clock: inject a fake ``clock`` into ``ServeEngine`` /
+``ServeFrontend`` / ``Telemetry`` and time only moves when the test says
+so.
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def now() -> float:
+    """Monotonic seconds (the process-wide serve-path timebase)."""
+    return time.perf_counter()

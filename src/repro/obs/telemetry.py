@@ -1,0 +1,388 @@
+"""The instrumentation surface the serving stack calls.
+
+One :class:`Telemetry` object bundles the three observability pieces —
+metrics registry, per-request span timelines, Chrome tracer — behind a
+flat set of ``on_*`` hooks that the engine, scheduler, allocator and
+prefix cache invoke at their transition points.  The hooks take plain
+values (rids, counts, clock readings), never engine objects, so the obs
+package depends on nothing in ``repro.serve``.
+
+:data:`NULL_TELEMETRY` is the disabled path: a singleton with the same
+method surface where every hook is ``pass`` and every context manager
+is a shared ``nullcontext``.  The serving stack calls hooks
+unconditionally; with obs off, each call is one attribute lookup plus a
+no-op invocation — no clocks read (``now()`` returns 0.0), no state
+mutated anywhere (pinned by ``tests/test_obs.py``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from collections import deque
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.obs import clock as _clock
+from repro.obs import spans
+from repro.obs.registry import MetricsRegistry
+from repro.obs.spans import RequestTimeline
+from repro.obs.trace import (
+    CACHE_TID,
+    ENGINE_TID,
+    PAGES_TID,
+    SCHED_TID,
+    ChromeTracer,
+)
+
+try:  # optional: align host spans with XLA device profiles
+    from jax.profiler import TraceAnnotation as _TraceAnnotation
+except Exception:  # pragma: no cover - jax always present in-container
+    _TraceAnnotation = None
+
+_NULLCTX = contextlib.nullcontext()
+
+
+class Telemetry:
+    """Live instrumentation: registry + timelines + (optional) tracer.
+
+    ``clock`` is injectable (defaults to the serve-path clock) so tests
+    drive every timestamp manually.  ``trace=False`` keeps the metrics
+    and timelines but skips Chrome-event collection (the overhead-bench
+    "metrics-on" configuration); ``jax_annotations=True`` additionally
+    wraps prefill/decode dispatch in ``jax.profiler.TraceAnnotation``
+    scopes.  Finished timelines are kept in a bounded deque
+    (``max_timelines``) so week-long runs do not grow host memory.
+    """
+
+    enabled = True
+
+    def __init__(self, clock=None, *, trace: bool = True,
+                 jax_annotations: bool = False, max_timelines: int = 1024):
+        self.clock = clock or _clock.now
+        self.registry = MetricsRegistry()
+        self.tracer = ChromeTracer(self.clock) if trace else None
+        self._jax_ann = jax_annotations and _TraceAnnotation is not None
+        self.timelines: Dict[int, RequestTimeline] = {}
+        self._finished: Deque[int] = deque()
+        self._max_timelines = max_timelines
+        self._step_n = 0
+        self._n_slots = 0
+
+    # ------------------------------------------------------------ plumbing
+    def now(self) -> float:
+        return self.clock()
+
+    def attach_engine(self, n_slots: int, mode: str) -> None:
+        """Label the trace tracks once the engine geometry is known."""
+        self._n_slots = n_slots
+        tr = self.tracer
+        if tr is None:
+            return
+        tr.thread_name(ENGINE_TID, f"engine.step ({mode})")
+        for s in range(n_slots):
+            tr.thread_name(1 + s, f"lane {s}")
+        tr.thread_name(SCHED_TID, "scheduler")
+        tr.thread_name(CACHE_TID, "prefix-cache")
+        tr.thread_name(PAGES_TID, "pages")
+
+    def _timeline(self, rid: int) -> Optional[RequestTimeline]:
+        return self.timelines.get(rid)
+
+    def _finish(self, rid: int) -> None:
+        self._finished.append(rid)
+        while len(self.timelines) > self._max_timelines and self._finished:
+            self.timelines.pop(self._finished.popleft(), None)
+
+    # --------------------------------------------------------- step framing
+    def step_begin(self) -> None:
+        self._step_n += 1
+        if self.tracer is not None:
+            self.tracer.begin(ENGINE_TID, "step",
+                              args={"n": self._step_n})
+
+    def step_end(self, t0: float) -> None:
+        t1 = self.clock()
+        self.registry.counter("serve_steps_total").inc()
+        self.registry.histogram("serve_step_s").observe(t1 - t0)
+        if self.tracer is not None:
+            self.tracer.end(ENGINE_TID, "step", t=t1)
+
+    def phase(self, name: str):
+        """Span a step phase (admit/prefill/decode) on the engine track."""
+        if self.tracer is None:
+            return _NULLCTX
+        return self._phase_ctx(name)
+
+    @contextlib.contextmanager
+    def _phase_ctx(self, name: str):
+        self.tracer.begin(ENGINE_TID, name)
+        try:
+            yield
+        finally:
+            self.tracer.end(ENGINE_TID, name)
+
+    def annotate(self, name: str):
+        """``jax.profiler.TraceAnnotation`` scope (no-op unless enabled)."""
+        if self._jax_ann:
+            return _TraceAnnotation(name)
+        return _NULLCTX
+
+    # ----------------------------------------------------- request lifecycle
+    def on_submit(self, rid: int, prompt_len: int, t: float) -> None:
+        self.registry.counter("serve_requests_submitted_total").inc()
+        self.registry.counter("serve_prompt_tokens_total").inc(prompt_len)
+        self.timelines[rid] = RequestTimeline(rid, t)
+
+    def on_shed(self, reason: str) -> None:
+        # refused before a Request exists: no rid, no timeline — count by
+        # reason and mark the scheduler track
+        self.registry.counter("serve_requests_shed_total",
+                              reason=reason).inc()
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "shed", args={"reason": reason})
+
+    def on_admit(self, rid: int, slot: int, cached_tokens: int) -> None:
+        t = self.clock()
+        self.registry.counter("serve_admissions_total").inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            if tl.first(spans.ADMITTED) is None:
+                self.registry.histogram("serve_queue_wait_s").observe(
+                    t - tl.submit_t)
+            tl.transition(spans.ADMITTED, t)
+            tl.transition(spans.PREFILLING, t)
+            tl.cached_tokens = max(tl.cached_tokens, cached_tokens)
+        if self.tracer is not None:
+            self.tracer.instant(
+                SCHED_TID, "admit",
+                args={"rid": rid, "slot": slot,
+                      "cached_tokens": cached_tokens})
+
+    def on_preempt(self, rid: int, slot: int) -> None:
+        t = self.clock()
+        self.registry.counter("serve_preemptions_total").inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            tl.transition(spans.PREEMPTED, t)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "preempt",
+                                args={"rid": rid, "slot": slot})
+
+    def on_prefill(self, lanes: List[Tuple[int, int, int]],
+                   t0: float) -> None:
+        """One batched chunked-prefill dispatch landed.
+
+        ``lanes``: ``(slot, rid, n_tokens)`` per participating lane;
+        ``t0``: clock reading just before dispatch.
+        """
+        t1 = self.clock()
+        n_total = sum(n for _, _, n in lanes)
+        self.registry.counter("serve_prefill_tokens_total").inc(n_total)
+        self.registry.histogram("serve_prefill_chunk_s").observe(t1 - t0)
+        for slot, rid, n in lanes:
+            tl = self._timeline(rid)
+            if tl is not None:
+                tl.prefill_spans.append((t0, t1, n))
+            if self.tracer is not None:
+                self.tracer.complete(1 + slot, "prefill", t0, t1,
+                                     args={"rid": rid, "tokens": n})
+
+    def on_decode(self, lanes: List[Tuple[int, int]], t0: float) -> None:
+        """One batched decode-step dispatch landed (``(slot, rid)``)."""
+        t1 = self.clock()
+        self.registry.histogram("serve_decode_step_s").observe(t1 - t0)
+        if self.tracer is not None:
+            for slot, rid in lanes:
+                self.tracer.complete(1 + slot, "decode", t0, t1,
+                                     args={"rid": rid})
+
+    def on_first_token(self, rid: int, ttft_s: float, t: float) -> None:
+        self.registry.histogram("serve_ttft_s").observe(ttft_s)
+        self.registry.counter("serve_tokens_generated_total").inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            tl.transition(spans.DECODING, t)
+            tl.token(t)
+
+    def on_token(self, rid: int, t: float) -> None:
+        self.registry.counter("serve_tokens_generated_total").inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            if tl.last_token_t is not None:
+                self.registry.histogram("serve_tpot_s").observe(
+                    t - tl.last_token_t)
+            tl.token(t)
+
+    def on_retire(self, rid: int, reason: str, n_out: int) -> None:
+        t = self.clock()
+        self.registry.counter("serve_requests_retired_total",
+                              reason=reason).inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            tl.transition(spans.RETIRED, t)
+            self.registry.histogram("serve_e2e_s").observe(t - tl.submit_t)
+            self._finish(rid)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "retire",
+                                args={"rid": rid, "tokens": n_out})
+
+    def on_cancel(self, rid: int, reason: str) -> None:
+        t = self.clock()
+        self.registry.counter("serve_requests_cancelled_total",
+                              reason=reason).inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            tl.transition(spans.TIMED_OUT if reason == "timed_out"
+                          else spans.CANCELLED, t)
+            self._finish(rid)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "cancel",
+                                args={"rid": rid, "reason": reason})
+
+    # -------------------------------------------------- prefix cache / pages
+    def on_cache_hit(self, rid: int, tokens: int, cow: bool) -> None:
+        self.registry.counter("prefix_cache_hits_total").inc()
+        self.registry.counter("prefix_cache_hit_tokens_total").inc(tokens)
+        if cow:
+            self.registry.counter("prefix_cache_cow_forks_total").inc()
+        if self.tracer is not None:
+            self.tracer.instant(
+                CACHE_TID, "hit",
+                args={"rid": rid, "tokens": tokens, "cow": cow})
+
+    def on_cache_miss(self, rid: int) -> None:
+        self.registry.counter("prefix_cache_misses_total").inc()
+        if self.tracer is not None:
+            self.tracer.instant(CACHE_TID, "miss", args={"rid": rid})
+
+    def on_cache_insert(self, n_pages: int) -> None:
+        self.registry.counter("prefix_cache_inserted_pages_total").inc(
+            n_pages)
+        if self.tracer is not None:
+            self.tracer.instant(CACHE_TID, "insert",
+                                args={"pages": n_pages})
+
+    def on_cache_evict(self, n_pages: int) -> None:
+        self.registry.counter("prefix_cache_evicted_pages_total").inc(
+            n_pages)
+        if self.tracer is not None:
+            self.tracer.instant(CACHE_TID, "evict",
+                                args={"pages": n_pages})
+
+    def on_pages(self, free: int, cached: int = 0) -> None:
+        self.registry.gauge("pages_free").set(free)
+        self.registry.gauge("pages_cached").set(cached)
+        if self.tracer is not None:
+            self.tracer.counter(PAGES_TID, "pages",
+                                {"free": free, "cached": cached})
+
+    # -------------------------------------------------------------- outputs
+    def snapshot(self) -> Dict:
+        """The structured snapshot ``ServeEngine.metrics()`` embeds."""
+        states: Dict[str, int] = {}
+        for tl in self.timelines.values():
+            states[tl.state] = states.get(tl.state, 0) + 1
+        return {
+            "steps": self._step_n,
+            "request_states": states,
+            "metrics": self.registry.to_dict(),
+        }
+
+    def prometheus_text(self) -> str:
+        return self.registry.prometheus_text()
+
+    def export_chrome_trace(self, path: str) -> Optional[str]:
+        """Write the Chrome trace JSON; None when tracing is off."""
+        if self.tracer is None:
+            return None
+        return self.tracer.write(path)
+
+
+class NullTelemetry:
+    """The disabled path: same surface, every hook a no-op.
+
+    No registry, no tracer, no timelines, no clock reads — constructing
+    engines with obs off costs one shared singleton reference, and every
+    instrumentation call site costs an attribute lookup plus an empty
+    call.  ``tests/test_obs.py`` pins that a serve run through this
+    object mutates nothing.
+    """
+
+    enabled = False
+    registry = None
+    tracer = None
+    timelines: Dict[int, RequestTimeline] = {}
+
+    def now(self) -> float:
+        return 0.0
+
+    def attach_engine(self, n_slots, mode):
+        pass
+
+    def step_begin(self):
+        pass
+
+    def step_end(self, t0):
+        pass
+
+    def phase(self, name):
+        return _NULLCTX
+
+    def annotate(self, name):
+        return _NULLCTX
+
+    def on_submit(self, rid, prompt_len, t):
+        pass
+
+    def on_shed(self, reason):
+        pass
+
+    def on_admit(self, rid, slot, cached_tokens):
+        pass
+
+    def on_preempt(self, rid, slot):
+        pass
+
+    def on_prefill(self, lanes, t0):
+        pass
+
+    def on_decode(self, lanes, t0):
+        pass
+
+    def on_first_token(self, rid, ttft_s, t):
+        pass
+
+    def on_token(self, rid, t):
+        pass
+
+    def on_retire(self, rid, reason, n_out):
+        pass
+
+    def on_cancel(self, rid, reason):
+        pass
+
+    def on_cache_hit(self, rid, tokens, cow):
+        pass
+
+    def on_cache_miss(self, rid):
+        pass
+
+    def on_cache_insert(self, n_pages):
+        pass
+
+    def on_cache_evict(self, n_pages):
+        pass
+
+    def on_pages(self, free, cached=0):
+        pass
+
+    def snapshot(self) -> Dict:
+        return {}
+
+    def prometheus_text(self) -> str:
+        return ""
+
+    def export_chrome_trace(self, path) -> Optional[str]:
+        return None
+
+
+NULL_TELEMETRY = NullTelemetry()

@@ -29,13 +29,13 @@ import contextlib
 import dataclasses
 import functools
 import logging
-import time
 from typing import Deque, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro.obs as obs
 from repro.config.base import EngineConfig, ModelConfig, ServeConfig
 from repro.dist.hints import use_mesh
 from repro.dist.sharding import (
@@ -108,7 +108,11 @@ class Request:
     preemptions: int = 0
     # prefill tokens served from the prefix cache at (re-)admission
     cached_tokens: int = 0
-    # time-to-first-token relative to ``run()`` start (benchmarks)
+    # clock reading at ``submit()`` — the anchor for per-request latency
+    submit_t: float = 0.0
+    # time-to-first-token measured from ``submit_t`` (per request; the
+    # old run()-relative measurement overstated TTFT for every request
+    # submitted after the engine started stepping)
     ttft: Optional[float] = None
     # --- SLA / front-end state --------------------------------------
     priority: str = "default"         # interactive | default | batch
@@ -178,10 +182,19 @@ class ServeEngine:
         prefix_cache=None,
         mesh=None,
         attn_backend: Optional[str] = None,
+        clock=None,
+        telemetry=None,
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.mesh = mesh
+        # ``clock``: injectable timebase for every engine timestamp
+        # (``submit_t``, TTFT, telemetry spans) — defaults to the serve
+        # clock (repro.obs.clock).  ``telemetry``: an explicit Telemetry /
+        # NullTelemetry; None defers to the process-wide repro.obs switch.
+        self._clock = clock if clock is not None else obs.clock.now
+        self.obs = (telemetry if telemetry is not None
+                    else obs.telemetry(clock))
         # the EngineConfig is resolved into an EnginePlan exactly once, at
         # construction; the plan is the only engine object the decode loop
         # ever sees.  The mesh rides in the plan, so the sharded backend
@@ -263,8 +276,8 @@ class ServeEngine:
 
         self.queue: Deque[Request] = collections.deque()
         self._next_rid = 0
-        self._run_t0 = 0.0
         self.shed_count = 0  # AdmissionRejected raises since construction
+        self.obs.attach_engine(n_slots, mode)
 
         cfg_ = self.cfg
         plan_ = self.plan
@@ -286,12 +299,12 @@ class ServeEngine:
                 self.pages = jax.device_put(
                     self.pages, cache_shardings(mesh, self.pages))
             self.alloc = PageAllocator(n_pages, self.page_size, n_slots,
-                                       max_len)
+                                       max_len, obs=self.obs)
             # the prefix cache attaches to the allocator (resident-page
             # ownership + LRU eviction when the free list runs dry)
             self.prefix_cache = None
             if prefix_cache:
-                self.prefix_cache = PrefixCache(self.alloc)
+                self.prefix_cache = PrefixCache(self.alloc, obs=self.obs)
                 self.alloc.attach_cache(self.prefix_cache)
             if self.scfg.sched == "budget":
                 # default budget: every lane decodes plus one full prefill
@@ -301,11 +314,11 @@ class ServeEngine:
                 self.sched = BudgetScheduler(
                     self.alloc, self.prefill_chunk,
                     prefix_cache=self.prefix_cache,
-                    step_tokens=step_tokens)
+                    step_tokens=step_tokens, obs=self.obs)
             else:
                 self.sched = PagedScheduler(
                     self.alloc, self.prefill_chunk,
-                    prefix_cache=self.prefix_cache)
+                    prefix_cache=self.prefix_cache, obs=self.obs)
             # lane-state shardings are computed once: block tables and
             # positions always enter the device under their mesh placement
             self._table_shardings = None
@@ -382,6 +395,7 @@ class ServeEngine:
         queue = self.sched.queue if self.mode == "paged" else self.queue
         if self.scfg.max_queue and len(queue) >= self.scfg.max_queue:
             self.shed_count += 1
+            self.obs.on_shed("queue_full")
             raise AdmissionRejected("queue_full")
         if (self.mode == "paged"
                 and pages_for(len(prompt) + 1, self.page_size)
@@ -390,14 +404,17 @@ class ServeEngine:
             # a request that can never be granted must not sit in the
             # queue deadlocking everything behind eviction+preemption
             self.shed_count += 1
+            self.obs.on_shed("pool_too_small")
             raise AdmissionRejected("pool_too_small")
         req = Request(self._next_rid, prompt,
                       self.scfg.max_new_tokens if max_new_tokens is None
                       else max_new_tokens,
                       priority=priority, tenant=tenant)
         req.prefill_tokens = list(prompt)
+        req.submit_t = self._clock()
         self._next_rid += 1
         queue.append(req)
+        self.obs.on_submit(req.rid, len(prompt), req.submit_t)
         return req
 
     def has_work(self) -> bool:
@@ -412,25 +429,31 @@ class ServeEngine:
         retire); returns the requests that finished this step.  The unit
         the streaming front-end drives — ``run()`` is just this in a
         loop."""
-        if not self._run_t0:
-            self._run_t0 = time.perf_counter()
         with self._mesh_ctx():
+            return self._step_framed()
+
+    def _step_framed(self) -> List[Request]:
+        """One step with its telemetry framing (B/E span on the engine
+        track, step counter + duration histogram).  Caller holds the
+        mesh context."""
+        t0 = self.obs.now()
+        self.obs.step_begin()
+        try:
             if self.mode == "paged":
                 return self._step_paged()
             return self._step_slots()
+        finally:
+            self.obs.step_end(t0)
 
     def run(self) -> List[Request]:
         """Drive until queue + slots drain; returns completed requests."""
-        self._run_t0 = time.perf_counter()
         # the mesh context makes the model-internal sharding hints live
         # (they are no-ops off-mesh); device placement itself was pinned at
         # construction via param/cache shardings.
         finished: List[Request] = []
         with self._mesh_ctx():
-            step = (self._step_paged if self.mode == "paged"
-                    else self._step_slots)
             while self.has_work():
-                finished.extend(step())
+                finished.extend(self._step_framed())
         return finished
 
     def cancel(self, req: Request, reason: str = "cancelled") -> bool:
@@ -447,6 +470,7 @@ class ServeEngine:
             return False
         req.cancelled = True
         req.finish_reason = reason
+        self.obs.on_cancel(req.rid, reason)
         if self.mode == "paged":
             for slot, r in enumerate(self.sched.slot_req):
                 if r is req:
@@ -502,18 +526,41 @@ class ServeEngine:
         return self.sched.prefill_computed if self.mode == "paged" else 0
 
     def prefix_stats(self) -> Optional[Dict[str, int]]:
+        """Prefix-cache counters (thin shim over :meth:`metrics`)."""
         return (self.prefix_cache.stats()
                 if self.prefix_cache is not None else None)
+
+    def metrics(self) -> Dict:
+        """Unified engine snapshot: lifecycle counters, prefix-cache
+        stats when a cache is attached, and — with ``repro.obs`` enabled
+        — the full telemetry snapshot (registry + request states) under
+        ``"obs"``.  Subsumes ``prefix_stats()`` / ``prefill_computed``
+        (both kept as thin shims)."""
+        out: Dict = {
+            "mode": self.mode,
+            "submitted": self._next_rid,
+            "shed": self.shed_count,
+            "preemptions": self.preemptions,
+            "prefill_computed": self.prefill_computed,
+        }
+        if self.prefix_cache is not None:
+            out["prefix"] = self.prefix_cache.stats()
+        if self.obs.enabled:
+            out["obs"] = self.obs.snapshot()
+        return out
 
     # ================================================== paged internals
     def _step_paged(self) -> List[Request]:
         finished: List[Request] = []
-        self.sched.admit()
-        self._apply_forks()
-        self._prefill_once()
+        with self.obs.phase("admit"):
+            self.sched.admit()
+            self._apply_forks()
+        with self.obs.phase("prefill"):
+            self._prefill_once()
         # pre-decode retire: max_new_tokens=0 must emit no tokens
         finished.extend(self._retire_paged(limit_only=True))
-        self._decode_once_paged()
+        with self.obs.phase("decode"):
+            self._decode_once_paged()
         finished.extend(self._retire_paged())
         return finished
 
@@ -534,11 +581,16 @@ class ServeEngine:
         if batch is None:
             return
         tokens, pos0, seq_lens, lanes = batch
+        t0 = self.obs.now()
         bt, _ = self.alloc.device_tables(self._table_shardings)
-        logits, self.pages = self._prefill_paged(
-            self.params, self.pages, bt, jnp.asarray(tokens),
-            jnp.asarray(pos0), jnp.asarray(seq_lens))
-        lg = np.asarray(logits)
+        with self.obs.annotate("serve.prefill_chunk"):
+            logits, self.pages = self._prefill_paged(
+                self.params, self.pages, bt, jnp.asarray(tokens),
+                jnp.asarray(pos0), jnp.asarray(seq_lens))
+            lg = np.asarray(logits)  # host sync: the chunk has landed
+        self.obs.on_prefill(
+            [(slot, self.sched.slot_req[slot].rid, n)
+             for slot, n in lanes], t0)
         for slot, n_real in lanes:
             req = self.sched.slot_req[slot]
             req.prefill_pos += n_real
@@ -571,18 +623,25 @@ class ServeEngine:
             return
         self.sched.charge_decode(ready)
         updates: Dict[int, int] = {}
+        tnow = self._clock()
         for slot, req in ready:
             tok = self._sample_next(req)
             if not req.output and req.ttft is None:
-                req.ttft = time.perf_counter() - self._run_t0
+                req.ttft = tnow - req.submit_t
+                self.obs.on_first_token(req.rid, req.ttft, tnow)
+            else:
+                self.obs.on_token(req.rid, tnow)
             req.output.append(tok)
             updates[slot] = tok
         tokens = self._lane_tokens(updates)
         active = jnp.asarray(self.sched.lane_mask(updates))
+        t0 = self.obs.now()
         bt, pos = self.alloc.device_tables(self._table_shardings)
-        logits, self.pages = self._decode_paged(
-            self.params, self.pages, bt, pos, active, tokens)
-        lg = np.asarray(logits)
+        with self.obs.annotate("serve.decode_step"):
+            logits, self.pages = self._decode_paged(
+                self.params, self.pages, bt, pos, active, tokens)
+            lg = np.asarray(logits)  # host sync: the step has landed
+        self.obs.on_decode([(s, r.rid) for s, r in ready], t0)
         for slot, req in ready:
             self.alloc.pos[slot] += 1
             req.last_logits = lg[slot, -1]
@@ -599,6 +658,7 @@ class ServeEngine:
                 self.sched.drop_forks(slot)
                 self.alloc.free_slot(slot)
                 self.sched.slot_req[slot] = None
+                self.obs.on_retire(req.rid, "length", len(req.output))
         return done
 
     # ================================================== slots internals
@@ -616,6 +676,7 @@ class ServeEngine:
             if self.slot_req[slot] is None and self.queue:
                 req = self.queue.popleft()
                 self.slot_req[slot] = req
+                self.obs.on_admit(req.rid, slot, 0)
                 self._reset_slot(slot)
                 self._prefill_slot(slot, req)
 
@@ -649,10 +710,13 @@ class ServeEngine:
         slot at a time — the legacy baseline; the paged engine replaces
         this loop with batched chunked prefill)."""
         logits = None
-        for t in req.prompt:
-            tok = self._slot_tokens({slot: t})
-            logits, self.cache = self._masked_step(tok, only_slot=slot)
-        req.last_logits = np.asarray(logits[slot, -1])
+        t0 = self.obs.now()
+        with self.obs.annotate("serve.prefill_slot"):
+            for t in req.prompt:
+                tok = self._slot_tokens({slot: t})
+                logits, self.cache = self._masked_step(tok, only_slot=slot)
+            req.last_logits = np.asarray(logits[slot, -1])
+        self.obs.on_prefill([(slot, req.rid, len(req.prompt))], t0)
 
     def _slot_tokens(self, updates: Dict[int, int]) -> jnp.ndarray:
         if self.cfg.family == "audio":
@@ -702,6 +766,7 @@ class ServeEngine:
         if not active:
             return
         updates = {}
+        tnow = self._clock()
         for slot, req in active.items():
             if req.last_logits is None:
                 continue
@@ -709,16 +774,22 @@ class ServeEngine:
                 continue
             tok = self._sample_next(req)
             if not req.output and req.ttft is None:
-                req.ttft = time.perf_counter() - self._run_t0
+                req.ttft = tnow - req.submit_t
+                self.obs.on_first_token(req.rid, req.ttft, tnow)
+            else:
+                self.obs.on_token(req.rid, tnow)
             req.output.append(tok)
             updates[slot] = tok
         if not updates:
             return
         tokens = self._slot_tokens(updates)
         keep = jnp.asarray([s in updates for s in range(self.n_slots)])
-        logits, new_cache = self._step(self.params, self.cache, tokens)
-        self.cache = self._merge_cache(self.cache, new_cache, keep)
-        lg = np.asarray(logits)
+        t0 = self.obs.now()
+        with self.obs.annotate("serve.decode_step"):
+            logits, new_cache = self._step(self.params, self.cache, tokens)
+            self.cache = self._merge_cache(self.cache, new_cache, keep)
+            lg = np.asarray(logits)  # host sync: the step has landed
+        self.obs.on_decode([(s, self.slot_req[s].rid) for s in updates], t0)
         for slot in updates:
             self.slot_req[slot].last_logits = lg[slot, -1]
 
@@ -732,6 +803,7 @@ class ServeEngine:
                 req.finish_reason = "length"
                 done.append(req)
                 self.slot_req[slot] = None
+                self.obs.on_retire(req.rid, "length", len(req.output))
         return done
 
     # ------------------------------------------------------------ shared

@@ -37,16 +37,17 @@ Stream lifecycle (also in ``docs/serving.md``)::
 The front-end is synchronous-cooperative, not threaded: ``step()`` runs
 one engine step and pumps finished tokens into every live stream, and
 stream iteration calls ``step()`` on demand.  A ``clock`` injectable
-(default ``time.perf_counter``) keeps deadline behavior deterministic
-under test.  Like the scheduler and allocator, all of this is host-side
-state — nothing here changes what the jitted steps see.
+(default the serve-path clock, :func:`repro.obs.clock.now`) keeps
+deadline behavior deterministic under test.  Like the scheduler and
+allocator, all of this is host-side state — nothing here changes what
+the jitted steps see.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Iterator, List, Optional
 
+from repro.obs import clock as _obs_clock
 from repro.serve.engine import AdmissionRejected, Request, ServeEngine
 
 # terminal stream states
@@ -143,9 +144,9 @@ class ServeFrontend:
     and token timestamps read it, so tests drive it manually.
     """
 
-    def __init__(self, engine: ServeEngine, clock=time.perf_counter):
+    def __init__(self, engine: ServeEngine, clock=None):
         self.engine = engine
-        self._clock = clock
+        self._clock = clock if clock is not None else _obs_clock.now
         self.streams: List[TokenStream] = []   # every submission, in order
         self._live: List[TokenStream] = []
         self.shed_count = 0

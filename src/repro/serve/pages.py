@@ -53,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config.base import ModelConfig
+from repro.obs.telemetry import NULL_TELEMETRY
 
 NULL_PAGE = 0  # physical page 0 is never allocated; garbage writes land here
 
@@ -170,7 +171,8 @@ class PageAllocator:
     """
 
     def __init__(self, n_pages: int, page_size: int, n_slots: int,
-                 max_len: int):
+                 max_len: int, obs=None):
+        self.obs = obs if obs is not None else NULL_TELEMETRY
         self.page_size = page_size
         self.n_pages = n_pages
         self.n_slots = n_slots
@@ -198,6 +200,13 @@ class PageAllocator:
         available.
         """
         self._cache = cache
+
+    def _emit_pages(self) -> None:
+        """Publish pool occupancy (free / cache-resident) to telemetry —
+        the ``C`` counter series on the pages trace track."""
+        self.obs.on_pages(
+            len(self.free),
+            self._cache.cached_pages if self._cache is not None else 0)
 
     # ----------------------------------------------------------- capacity
     @property
@@ -247,6 +256,7 @@ class PageAllocator:
         blk = len(self._mapped[slot])
         self._mapped[slot].append(page)
         self.block_tables[slot, blk] = page
+        self._emit_pages()
         return page
 
     def map_shared(self, slot: int, pages: List[int]) -> None:
@@ -269,6 +279,7 @@ class PageAllocator:
                 self._cache._on_pin(page)
             self._mapped[slot].append(page)
             self.block_tables[slot, blk] = page
+        self._emit_pages()
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s block table to cover ``n_tokens`` logical tokens.
@@ -289,6 +300,7 @@ class PageAllocator:
             self.refcount[page] = 1
             self._mapped[slot].append(page)
             self.block_tables[slot, blk] = page
+        self._emit_pages()
         return True
 
     def _release_page(self, page: int) -> None:
@@ -314,6 +326,7 @@ class PageAllocator:
         the free list.  Called by the prefix cache only."""
         assert page != NULL_PAGE and self.refcount[page] == 0
         self.free.append(page)
+        self._emit_pages()
 
     def free_slot(self, slot: int) -> None:
         """Release every page the slot maps (request retired or preempted).
@@ -323,6 +336,7 @@ class PageAllocator:
         self._mapped[slot] = []
         self.block_tables[slot, :] = NULL_PAGE
         self.pos[slot] = 0
+        self._emit_pages()
 
     def block_row(self, slot: int) -> np.ndarray:
         """The slot's block-table row (a copy — safe to hand to the tree)."""

@@ -51,6 +51,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.telemetry import NULL_TELEMETRY
 from repro.serve.pages import NULL_PAGE, PageAllocator
 
 
@@ -111,8 +112,9 @@ class PrefixCache:
     list runs dry.
     """
 
-    def __init__(self, alloc: PageAllocator):
+    def __init__(self, alloc: PageAllocator, obs=None):
         self.alloc = alloc
+        self.obs = obs if obs is not None else NULL_TELEMETRY
         self.page_size = alloc.page_size
         self.root = _Node(None, None, NULL_PAGE)
         self._by_page: Dict[int, _Node] = {}
@@ -272,6 +274,8 @@ class PrefixCache:
             child.last_used = self._tick()
             node = child
         self.inserted_pages += new
+        if new:
+            self.obs.on_cache_insert(new)
         return new
 
     # ------------------------------------------------------------ eviction
@@ -360,6 +364,8 @@ class PrefixCache:
                     and ref[parent.page] == 0):
                 heapq.heappush(self._lru, (parent.last_used, parent.page))
         self.evicted_pages += evicted
+        if evicted:
+            self.obs.on_cache_evict(evicted)
         return evicted
 
     # ------------------------------------------------------------- reports

@@ -56,6 +56,7 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs.telemetry import NULL_TELEMETRY
 from repro.serve.pages import PageAllocator, pages_for
 
 PrefillBatch = Tuple[np.ndarray, np.ndarray, np.ndarray,
@@ -75,8 +76,9 @@ class PagedScheduler:
     """Admission + prefill batching + preemption over ``n_slots`` lanes."""
 
     def __init__(self, alloc: PageAllocator, chunk: int,
-                 prefix_cache=None):
+                 prefix_cache=None, obs=None):
         self.alloc = alloc
+        self.obs = obs if obs is not None else NULL_TELEMETRY
         self.chunk = int(chunk)
         if self.chunk < 1:
             raise ValueError(f"prefill chunk must be >= 1, got {chunk}")
@@ -173,6 +175,11 @@ class PagedScheduler:
             self.prefix_cache.hits += bool(matched)
             self.prefix_cache.misses += not matched
             self.prefix_cache.hit_tokens += matched
+            if matched:
+                self.obs.on_cache_hit(req.rid, matched,
+                                      match.partial is not None)
+            else:
+                self.obs.on_cache_miss(req.rid)
             if match.partial is not None:
                 dst = self.alloc.alloc_page(slot)
                 assert dst is not None, \
@@ -184,6 +191,7 @@ class PagedScheduler:
         self.alloc.pos[slot] = matched
         ok = self.alloc.ensure(slot, len(toks) + 1)
         assert ok, "can_allocate granted but ensure failed"
+        self.obs.on_admit(req.rid, slot, matched)
         return True
 
     # ----------------------------------------------------------- prefill
@@ -285,6 +293,7 @@ class PagedScheduler:
 
     def _preempt(self, slot: int) -> None:
         req = self.slot_req[slot]
+        self.obs.on_preempt(req.rid, slot)
         self.alloc.free_slot(slot)
         self.slot_req[slot] = None
         # recompute-style: everything generated so far becomes prefill
@@ -338,9 +347,9 @@ class BudgetScheduler(PagedScheduler):
     """
 
     def __init__(self, alloc: PageAllocator, chunk: int,
-                 prefix_cache=None, *, step_tokens: int,
+                 prefix_cache=None, obs=None, *, step_tokens: int,
                  weights: Optional[Dict[str, float]] = None):
-        super().__init__(alloc, chunk, prefix_cache=prefix_cache)
+        super().__init__(alloc, chunk, prefix_cache=prefix_cache, obs=obs)
         self.step_tokens = int(step_tokens)
         # >= 2: one token of prefill progress plus the completion reserve
         # must fit in an otherwise-idle step, or a 1-token-tail prompt
