@@ -1,6 +1,6 @@
 #!/usr/bin/env python
-"""Paged decode-attention benchmark: fused in-place kernel vs the gather
-reference backend.
+"""Paged-attention benchmark: fused in-place kernel vs the gather
+reference backend, decode and in-kernel chunked prefill.
 
 For each (context length × page size × kv_bits) sweep point the same
 synthetic page pool + block tables are attended through
@@ -15,31 +15,42 @@ synthetic page pool + block tables are attended through
                            claim is the bytes-moved model, which a real
                            TPU run validates as ``pallas_tpu``).
 
-Reported per point: per-call wall time / decode tok/s for both paths, the
-modeled HBM bytes per decode token (``decode_attn_bytes``), and the
-fused/gather byte ratio.  Two gates fail the run: the bytes-moved model
-must put the fused path below gather at every context length >= one page
-(a *self-consistency check of the analytic model* — both numbers come
-from ``decode_attn_bytes``, so this guards edits to the model, not the
-kernel's actual traffic, which is the real-TPU ROADMAP item), and greedy
-serving through the fused kernel must be token-identical to the gather
-backend (the behavioral gate — this one exercises the kernel).  Results
-land in ``BENCH_attn.json``.
+The prefill sweep does the same for a ``chunk``-token query block through
+the kernel's prefill grid (mid-page ``pos0``, ragged last lane) vs the
+gather path that materializes the full (B, T, Hkv, Dh) view per chunk.
+
+Reported per point: per-call wall time / tok/s for both paths, the
+modeled HBM bytes per token (``decode_attn_bytes`` /
+``prefill_attn_bytes``), and the fused/gather byte ratio.  Two gates fail
+the run: the bytes-moved model must put the fused path below gather at
+every sweep point (a *self-consistency check of the analytic model* —
+both numbers come from the same function, so this guards edits to the
+model, not the kernel's actual traffic, which is the real-TPU ROADMAP
+item), and greedy serving through the fused kernel must be
+token-identical to the gather backend (the behavioral gate — this one
+exercises the kernel).  Results land in ``BENCH_attn.json``.
+
+``--mesh`` adds the shard_mapped rows: the same sweep points through
+``sharded_paged_attention`` on a forced-host (4, 2) ``(data, model)``
+mesh (KV heads over model), plus the serve identity gate on that mesh.
 
   PYTHONPATH=src python benchmarks/attn_bench.py            # full sweep
   PYTHONPATH=src python benchmarks/attn_bench.py --smoke    # CI subset
+  PYTHONPATH=src python benchmarks/attn_bench.py --smoke --mesh
 """
 
 import argparse
 import json
+import os
 
 try:
-    from benchmarks.common import time_call
+    from benchmarks.common import time_call, write_bench
 except ImportError:  # executed as a loose script
-    from common import time_call
+    from common import time_call, write_bench
 
 
-def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps):
+def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps,
+                 mesh=None):
     import jax
     import jax.numpy as jnp
     import numpy as np
@@ -64,7 +75,7 @@ def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps):
         fn = jax.jit(lambda q, kp, vp, bt, pos, _b=backend:
                      attend_paged_decode(q, kp, vp, bt, pos, 0,
                                          k_scale=ks, v_scale=vs,
-                                         attn_backend=_b))
+                                         attn_backend=_b, mesh=mesh))
         secs[backend] = time_call(fn, q, kp, vp, bt, pos, reps=reps,
                                   name=f"attn_{backend}")
         outs[backend] = np.asarray(fn(q, kp, vp, bt, pos))
@@ -96,10 +107,71 @@ def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps):
     }
 
 
-def _serve_identity():
+def _prefill_sweep_point(context, page, kv_bits, *, batch, hkv, group, dh,
+                         chunk, reps, mesh=None):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.paged_attention.ops import (prefill_attn_bytes,
+                                                  synthetic_prefill_case)
+    from repro.models.attention import attend_paged_prefill
+
+    rng = np.random.default_rng(0)
+    hq = hkv * group
+    nblk = max(1, -(-context // page))
+    case = synthetic_prefill_case(rng, batch=batch, nblk=nblk, page=page,
+                                  hkv=hkv, group=group, dh=dh, chunk=chunk,
+                                  kv_bits=kv_bits)
+    q, kp, vp = case["q"], case["k_pages"], case["v_pages"]
+    ks, vs, bt = case["k_scale"], case["v_scale"], case["block_tables"]
+    pos0, seq = case["pos0"], case["seq_lens"]
+    positions = pos0[:, None] + jnp.arange(chunk, dtype=jnp.int32)[None]
+
+    outs, secs = {}, {}
+    for backend in ("gather", "pallas_interpret"):
+        fn = jax.jit(lambda q, kp, vp, bt, _b=backend:
+                     attend_paged_prefill(q, kp, vp, bt, positions, pos0,
+                                          seq, 0, k_scale=ks, v_scale=vs,
+                                          attn_backend=_b, mesh=mesh))
+        secs[backend] = time_call(fn, q, kp, vp, bt, reps=reps,
+                                  name=f"attn_pf_{backend}")
+        outs[backend] = np.asarray(fn(q, kp, vp, bt))
+
+    tol = 2e-2 if kv_bits else 2e-5
+    close = bool(np.allclose(outs["gather"], outs["pallas_interpret"],
+                             rtol=tol, atol=tol))
+    model_kw = dict(batch=batch, chunk=chunk, context=nblk * page,
+                    n_kv_heads=hkv, head_dim=dh, n_q_heads=hq,
+                    page_size=page, kv_bits=kv_bits)
+    gb = prefill_attn_bytes("gather", **model_kw)
+    fb = prefill_attn_bytes("pallas_interpret", **model_kw)
+    toks = batch * chunk
+    return {
+        "context": context,
+        "page_size": page,
+        "kv_bits": kv_bits,
+        "batch": batch,
+        "chunk": chunk,
+        "n_kv_heads": hkv,
+        "gqa_group": group,
+        "head_dim": dh,
+        "gather_us": round(secs["gather"] * 1e6, 1),
+        "fused_us": round(secs["pallas_interpret"] * 1e6, 1),
+        "gather_tok_per_s": round(toks / secs["gather"], 1),
+        "fused_tok_per_s": round(toks / secs["pallas_interpret"], 1),
+        "gather_bytes_per_tok": gb // toks,
+        "fused_bytes_per_tok": fb // toks,
+        "fused_over_gather_bytes": round(fb / gb, 4),
+        "outputs_close": close,
+    }
+
+
+def _serve_identity(mesh=None):
     """Greedy tokens through the fused kernel == the gather backend on a
     reduced model (the end-to-end gate; mirrors tests/test_paged_attention
-    so the bench stays honest when run standalone)."""
+    so the bench stays honest when run standalone).  ``mesh``: run both
+    backends on that mesh (the shard_mapped kernel vs gather)."""
     import dataclasses
 
     import jax
@@ -112,12 +184,14 @@ def _serve_identity():
     cfg = dataclasses.replace(get_reduced("qwen2.5-3b"), dtype="float32")
     params = init_params(cfg, jax.random.PRNGKey(0))
     prompts = [[1, 2, 3], [4], [5, 6, 7, 8]]
+    # on a mesh, lanes shard over the data axis — size slots to it
+    n_slots = 2 if mesh is None else max(2, mesh.devices.shape[0])
 
     def gen(abk):
         scfg = ServeConfig(max_new_tokens=6, engine=EngineConfig())
-        eng = ServeEngine(cfg, params, scfg, n_slots=2, max_len=32,
+        eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=32,
                           mode="paged", page_size=4, prefill_chunk=3,
-                          attn_backend=abk)
+                          attn_backend=abk, mesh=mesh)
         for p in prompts:
             eng.submit(p)
         return [r.output for r in sorted(eng.run(), key=lambda r: r.rid)]
@@ -126,41 +200,73 @@ def _serve_identity():
 
 
 def run(contexts=(64, 256, 1024), pages=(8, 16), kv_bits_sweep=(0, 8),
-        batch=4, hkv=4, group=2, dh=64, reps=5,
-        out: str = "BENCH_attn.json"):
+        batch=4, hkv=4, group=2, dh=64, chunk=16, reps=5,
+        mesh_shape=None, out: str = "BENCH_attn.json"):
     """Bench entry point (also registered in benchmarks.run).  Returns the
-    repo-standard (name, us_per_call, derived) CSV rows."""
-    results, rows = [], []
+    repo-standard (name, us_per_call, derived) CSV rows.  ``mesh_shape``:
+    a ``(data, model)`` tuple — adds shard_mapped sweep rows on that
+    forced-host mesh and runs the serve identity gate on it too."""
+    mesh = None
+    if mesh_shape is not None:
+        from repro.dist import make_mesh
+
+        mesh = make_mesh(tuple(mesh_shape), ("data", "model"))
+
+    def _rows_for(tag, r):
+        return [(f"{tag}.gather", r["gather_us"],
+                 f"bytes/tok={r['gather_bytes_per_tok']}"),
+                (f"{tag}.fused", r["fused_us"],
+                 f"bytes/tok={r['fused_bytes_per_tok']}"
+                 f" ratio={r['fused_over_gather_bytes']}")]
+
+    results, pf_results, rows = [], [], []
     for context in contexts:
         for page in pages:
             for kb in kv_bits_sweep:
-                r = _sweep_point(context, page, kb, batch=batch, hkv=hkv,
-                                 group=group, dh=dh, reps=reps)
+                kw = dict(batch=batch, hkv=hkv, group=group, dh=dh,
+                          reps=reps)
+                r = _sweep_point(context, page, kb, **kw)
                 results.append(r)
                 tag = f"attn_c{context}_p{page}" + (f"_kv{kb}" if kb else "")
-                rows.append((f"{tag}.gather", r["gather_us"],
-                             f"bytes/tok={r['gather_bytes_per_tok']}"))
-                rows.append((f"{tag}.fused", r["fused_us"],
-                             f"bytes/tok={r['fused_bytes_per_tok']}"
-                             f" ratio={r['fused_over_gather_bytes']}"))
+                rows += _rows_for(tag, r)
+                pf = _prefill_sweep_point(context, page, kb, chunk=chunk,
+                                          **kw)
+                pf_results.append(pf)
+                rows += _rows_for(f"attn_pf_c{context}_p{page}"
+                                  + (f"_kv{kb}" if kb else ""), pf)
+                if mesh is not None:
+                    rs = _sweep_point(context, page, kb, mesh=mesh, **kw)
+                    rs["mesh"] = list(mesh_shape)
+                    results.append(rs)
+                    rows += _rows_for(f"{tag}.sh", rs)
+                    ps = _prefill_sweep_point(context, page, kb,
+                                              chunk=chunk, mesh=mesh, **kw)
+                    ps["mesh"] = list(mesh_shape)
+                    pf_results.append(ps)
+                    rows += _rows_for(f"attn_pf_c{context}_p{page}"
+                                      + (f"_kv{kb}" if kb else "")
+                                      + ".sh", ps)
     identical = _serve_identity()
+    mesh_identical = _serve_identity(mesh) if mesh is not None else None
+    every = results + pf_results
     record = {
         "bench": "attn",
         "note": ("CPU wall times run the kernel interpreted (machinery "
                  "check); the bytes gate is a self-consistency check of "
-                 "the analytic decode_attn_bytes model, and pallas_tpu on "
-                 "hardware validates the kernel's actual traffic"),
+                 "the analytic decode/prefill_attn_bytes models, and "
+                 "pallas_tpu on hardware validates the kernel's actual "
+                 "traffic"),
+        "mesh": list(mesh_shape) if mesh_shape else None,
         "results": results,
-        "outputs_close_everywhere": all(r["outputs_close"] for r in results),
+        "prefill_results": pf_results,
+        "outputs_close_everywhere": all(r["outputs_close"] for r in every),
         "fused_fewer_bytes_everywhere": all(
             r["fused_bytes_per_tok"] < r["gather_bytes_per_tok"]
-            for r in results),
+            for r in every),
         "token_identical": bool(identical),
+        "token_identical_on_mesh": mesh_identical,
     }
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows
 
 
@@ -168,20 +274,36 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: two contexts, one page size")
+    ap.add_argument("--mesh", action="store_true",
+                    help="add shard_mapped rows on a forced-host (4, 2) "
+                         "(data, model) mesh (8 host devices)")
     ap.add_argument("--out", default="BENCH_attn.json")
     args = ap.parse_args()
 
+    mesh_shape = None
+    if args.mesh:
+        # must land before the first jax import (lazy in the sweeps)
+        if "xla_force_host_platform_device_count" not in os.environ.get(
+                "XLA_FLAGS", ""):
+            os.environ["XLA_FLAGS"] = (
+                "--xla_force_host_platform_device_count=8 "
+                + os.environ.get("XLA_FLAGS", ""))
+        mesh_shape = (4, 2)
+
     if args.smoke:
-        rows = run(contexts=(32, 128), pages=(8,), batch=2, hkv=2, group=2,
-                   dh=16, reps=3, out=args.out)
+        rows = run(contexts=(32, 128), pages=(8,), batch=4, hkv=2, group=2,
+                   dh=16, chunk=6, reps=3, mesh_shape=mesh_shape,
+                   out=args.out)
     else:
-        rows = run(out=args.out)
+        rows = run(mesh_shape=mesh_shape, out=args.out)
     print("name,us_per_call,derived")
     for row in rows:
         print(",".join(str(v) for v in row))
 
     with open(args.out) as f:
         record = json.load(f)
+    print(f"# device_kind={record['device_kind']}  "
+          f"interpret_mode={record['interpret_mode']}")
     if not record["fused_fewer_bytes_everywhere"]:
         raise SystemExit("fused path failed to beat gather's modeled "
                          "bytes/token at some sweep point")
@@ -190,9 +312,13 @@ def main():
     if not record["token_identical"]:
         raise SystemExit("fused greedy serving diverged from the gather "
                          "backend")
+    if record["token_identical_on_mesh"] is False:
+        raise SystemExit("shard_mapped fused serving diverged from the "
+                         "gather backend on the mesh")
     print(f"# fused<gather bytes everywhere="
           f"{record['fused_fewer_bytes_everywhere']}  "
-          f"token_identical={record['token_identical']}")
+          f"token_identical={record['token_identical']}  "
+          f"on_mesh={record['token_identical_on_mesh']}")
 
 
 if __name__ == "__main__":

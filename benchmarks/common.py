@@ -88,12 +88,14 @@ def build_model(arch: str):
 def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
                 max_new=8, kv_bits=0, page_size=8, prefill_chunk=16,
                 n_pages=0, prefix_cache=False, sched="fcfs",
-                step_tokens=0, max_queue=0, warm=True, telemetry=None):
+                step_tokens=0, max_queue=0, warm=True, telemetry=None,
+                attn_backend=None):
     """A ``ServeEngine`` with the bench-standard knobs, optionally with
     the jits warmed on a tiny throwaway request (so compilation is never
     billed to the first mode measured).  ``telemetry``: an explicit
     ``repro.obs`` Telemetry/NullTelemetry for this engine (None defers
-    to the process-wide switch)."""
+    to the process-wide switch).  ``attn_backend``: pin the paged
+    attention read path (None defers to the plan's ``auto``)."""
     from repro.config.base import EngineConfig, ServeConfig
     from repro.serve import ServeEngine
 
@@ -104,11 +106,41 @@ def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
         sched=sched, step_tokens=step_tokens, max_queue=max_queue)
     eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
                       mode=mode, prefix_cache=prefix_cache,
-                      telemetry=telemetry)
+                      telemetry=telemetry, attn_backend=attn_backend)
     if warm:
         eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
         eng.run()
     return eng
+
+
+def bench_env():
+    """Where did this bench run?  ``device_kind`` is the JAX device
+    (``cpu`` / ``TPU v4`` / ...); ``interpret_mode`` says whether Pallas
+    kernel bodies interpret (every non-TPU host) — a BENCH_*.json with
+    ``interpret_mode: true`` measures dispatch overhead and byte models,
+    never kernel speed, and must not be compared against hardware runs."""
+    import jax
+
+    from repro.engine.backends import default_interpret
+
+    return {
+        "device_kind": jax.devices()[0].device_kind,
+        "interpret_mode": default_interpret(),
+    }
+
+
+def write_bench(out, record):
+    """Write a BENCH_*.json record, stamping :func:`bench_env` into it —
+    every bench goes through here so no result file ships without its
+    device/interpret provenance.  No-op when ``out`` is falsy."""
+    import json
+
+    if not out:
+        return
+    record = {**bench_env(), **record}
+    with open(out, "w") as f:
+        json.dump(record, f, indent=2)
+    print(f"# wrote {out}")
 
 
 def tree_bytes(t):

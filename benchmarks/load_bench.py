@@ -43,9 +43,10 @@ import time
 
 try:
     from benchmarks.common import (build_model, make_engine, percentile,
-                                   wall_timer)
+                                   wall_timer, write_bench)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, percentile, wall_timer
+    from common import (build_model, make_engine, percentile, wall_timer,
+                        write_bench)
 
 from repro.obs.clock import now as _now
 
@@ -196,14 +197,17 @@ def _traced_run(cfg, params, n_slots, max_len, max_new, trace_path):
     """Serve a shared-prefix workload through a fully-traced engine and
     export + validate the Chrome trace (the observability CI gate rides
     this): the trace must parse and carry per-lane prefill/decode spans
-    plus scheduler and prefix-cache events."""
+    plus scheduler and prefix-cache events.  The engine runs the *fused*
+    attention backend (interpreted off-TPU), so the per-step prefill
+    spans cover the in-kernel chunked-prefill path — the span timeline
+    must not go dark when prefill stops being a Python-level gather."""
     import repro.obs as obs
     from repro.obs.trace import (CACHE_TID, SCHED_TID, validate_trace)
 
     tel = obs.Telemetry(trace=True)
     eng = make_engine(cfg, params, n_slots=n_slots, max_len=max_len,
                       max_new=max_new, sched="budget", prefix_cache=True,
-                      telemetry=tel)
+                      telemetry=tel, attn_backend="pallas_interpret")
     # shared prefix (page-aligned at the default page_size=8) so the
     # radix tree produces hit/insert events, not just misses
     prefix = [(3 * j + 1) % cfg.vocab_size for j in range(16)]
@@ -223,6 +227,7 @@ def _traced_run(cfg, params, n_slots, max_len, max_new, trace_path):
     cache_events = any(t == CACHE_TID for t, _ in seen)
     return {
         "trace_file": trace_path,
+        "attn_backend": eng.attn_backend,
         "trace_events": len(tel.tracer.events),
         "trace_tracks": track_counts,
         "trace_valid": True,  # validate_trace raised otherwise
@@ -306,10 +311,7 @@ def run(rate_mults=(0.5, 1.0, 4.0), arch: str = "qwen2.5-3b",
         record["trace"] = _traced_run(cfg, params, n_slots, max_len,
                                       max_new, trace)
         print(f"# wrote {trace} ({record['trace']['trace_events']} events)")
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows
 
 

@@ -37,9 +37,10 @@ import argparse
 import json
 
 try:
-    from benchmarks.common import build_model, make_engine, wall_timer
+    from benchmarks.common import (build_model, make_engine,
+                                   wall_timer, write_bench)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, wall_timer
+    from common import build_model, make_engine, wall_timer, write_bench
 
 OVERHEAD_BUDGET = 0.03  # metrics-on may cost at most 3% tok/s
 
@@ -136,10 +137,7 @@ def run(arch: str = "qwen2.5-3b", n_reqs: int = 16, n_slots: int = 4,
         "metrics_counters": counters,
         "trace_tracks": trace_tracks,
     }
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows
 
 

@@ -32,9 +32,10 @@ import argparse
 import json
 
 try:
-    from benchmarks.common import build_model, make_engine, wall_timer
+    from benchmarks.common import (build_model, make_engine,
+                                   wall_timer, write_bench)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, wall_timer
+    from common import build_model, make_engine, wall_timer, write_bench
 
 
 def _workload(cfg, n_reqs: int, prefix_len: int, suffix_len: int):
@@ -170,10 +171,7 @@ def run(batches=(2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
         "prefix_faster_at_batch4plus": all(
             v > 1.0 for b, v in speedup.items() if int(b) >= 4),
     }
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows
 
 

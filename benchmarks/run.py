@@ -41,6 +41,11 @@ def main() -> None:
         "load": load_bench.run,
         "obs": obs_bench.run,
     }
+    from benchmarks.common import bench_env
+
+    env = bench_env()
+    print(f"# device_kind={env['device_kind']}  "
+          f"interpret_mode={env['interpret_mode']}")
     picked = sys.argv[1:] or list(benches)
     print("name,us_per_call,derived")
     for name in picked:

@@ -22,9 +22,10 @@ import json
 
 try:
     from benchmarks.common import (build_model, make_engine, tree_bytes,
-                                   wall_timer)
+                                   wall_timer, write_bench)
 except ImportError:  # executed as a loose script
-    from common import build_model, make_engine, tree_bytes, wall_timer
+    from common import (build_model, make_engine, tree_bytes, wall_timer,
+                        write_bench)
 
 
 def _workload(cfg, batch: int, n_reqs: int, prompt_len: int,
@@ -123,10 +124,7 @@ def run(batches=(1, 2, 4), arch: str = "qwen2.5-3b", n_reqs_per_lane: int = 2,
         "paged_ge_slots_at_batch4plus": all(
             v >= 1.0 for b, v in speedup.items() if int(b) >= 4),
     }
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows
 
 

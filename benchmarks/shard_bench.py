@@ -28,7 +28,6 @@ over ``model``, ``EngineConfig.sharded=True``).
 
 import argparse
 import dataclasses
-import json
 import os
 
 N_DEV = int(os.environ.get("SHARD_BENCH_DEVICES", "8"))
@@ -88,6 +87,11 @@ def run(meshes=((1, 2), (1, 4), (1, 8), (2, 4)), arch: str = "qwen2.5-3b",
         out: str = "BENCH_shard.json"):
     """Returns the repo-standard (name, us_per_call, derived) CSV rows."""
     from repro.dist import make_mesh
+
+    try:
+        from benchmarks.common import write_bench
+    except ImportError:  # executed as a loose script
+        from common import write_bench
 
     cfg, params = _build(arch)
     prompts = [
@@ -156,10 +160,7 @@ def run(meshes=((1, 2), (1, 4), (1, 8), (2, 4)), arch: str = "qwen2.5-3b",
             for r in results
         },
     }
-    if out:
-        with open(out, "w") as f:
-            json.dump(record, f, indent=2)
-        print(f"# wrote {out}")
+    write_bench(out, record)
     return rows, record
 
 

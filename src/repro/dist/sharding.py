@@ -235,6 +235,33 @@ def cache_shardings(mesh, cache: Pytree) -> Pytree:
     return jax.tree_util.tree_map_with_path(one, cache)
 
 
+def paged_attn_partition(mesh, model_axis: str, n_kv_heads: int,
+                         batch: int) -> Tuple[Any, Any]:
+    """Spec entries for shard_mapping the fused paged-attention kernel.
+
+    Returns ``(head_entry, lane_entry)`` — the PartitionSpec entries for
+    the pool's KV-head axis and the per-lane axes (queries, block tables,
+    positions).  Heads shard over ``model_axis`` exactly when it divides
+    (matching :func:`cache_shardings`' heads-over-model placement, so the
+    per-shard kernel sees the head slice its pool shard already holds);
+    lanes shard over the data axes when the batch divides.  Anything
+    non-divisible degrades to replication (None entry), mirroring the
+    degrade discipline of the param specs — never an error.
+    """
+    sizes = _mesh_sizes(mesh)
+    msize = sizes.get(model_axis, 1)
+    head = (model_axis if msize > 1 and n_kv_heads > 0
+            and n_kv_heads % msize == 0 else None)
+    daxes = tuple(a for a in _data_axes(mesh) if a != model_axis)
+    prod = 1
+    for a in daxes:
+        prod *= sizes[a]
+    lane = None
+    if prod > 1 and batch > 0 and batch % prod == 0:
+        lane = daxes if len(daxes) > 1 else daxes[0]
+    return head, lane
+
+
 def pool_pages_for_mesh(n_pages: int, mesh) -> int:
     """Round a page-pool size up so the physical page axis shards evenly
     over the data axes.

@@ -101,14 +101,20 @@ def default_attn_backend() -> str:
 def resolve_attn_backend(name: str = AUTO, *, mesh=None) -> str:
     """Resolve an attention-backend name; ``auto`` consults the host.
 
-    ``mesh``: when a production mesh is pinned, ``auto`` resolves to
-    ``gather`` even on TPU — the fused kernel is not shard_mapped over the
-    pool's pages-over-data / heads-over-model placement yet (ROADMAP open
-    item), and the gather path carries the sharding hints.  An *explicit*
-    pallas name is honored as the caller's opt-in.
+    ``auto`` resolves the same way with or without a mesh: TPU hosts get
+    the fused kernel (``pallas_tpu``), everything else ``gather``.  The
+    kernel shard_maps over the plan's model axis
+    (``repro.engine.sharded.sharded_paged_attention`` — KV heads are
+    already the ``model``-sharded dim of the page pool), so a
+    mesh-carrying TPU plan now runs fused by default; the old downgrade
+    of ``auto``-on-mesh to ``gather`` is gone.  ``mesh`` is still
+    accepted so plan resolution reads naturally at call sites, but no
+    longer changes the answer — ``gather`` stays the reference backend
+    everywhere and an explicit name is always honored.
     """
+    del mesh  # no longer affects resolution (kept for call-site compat)
     if name in (AUTO, None, ""):
-        resolved = "gather" if mesh is not None else default_attn_backend()
+        resolved = default_attn_backend()
     else:
         resolved = name
     if resolved not in ATTN_BACKENDS:

@@ -42,13 +42,15 @@ class EnginePlan:
     ``radix``: weight bits retired per bit-serial pass (1 = IMAGine radix-2
         baseline, 2 = slice4/Booth-radix-4, 4 = nibble pass).
     ``kv_bits``: beyond-paper bit-planed KV cache (0 = off, 8 = int8).
-    ``attn_backend``: paged decode-attention read path — ``gather``
-        (materialize the logical KV view, the reference) or the fused
-        in-place kernel (``pallas_interpret`` / ``pallas_tpu``); ``auto``
-        resolves like the GEMV backend (TPU → ``pallas_tpu``, else
-        ``gather``), except that a mesh-carrying plan resolves ``auto``
-        to ``gather`` — the kernel is not shard_mapped over the sharded
-        pool yet.  Stored concrete, never ``"auto"``.
+    ``attn_backend``: paged-attention read path (decode *and* chunked
+        prefill) — ``gather`` (materialize the logical KV view, the
+        reference) or the fused in-place kernel (``pallas_interpret`` /
+        ``pallas_tpu``); ``auto`` resolves like the GEMV backend (TPU →
+        ``pallas_tpu``, else ``gather``), mesh or no mesh — on a
+        mesh-carrying plan the kernel shard_maps over ``model_axis``
+        (heads are the ``model``-sharded dim of the page pool), so
+        sharded TPU plans run fused by default.  Stored concrete, never
+        ``"auto"``.
     ``out_dtype``: None means "match the activation dtype".
     ``block_*``: Pallas kernel tile sizes (batch, PE-column, K-stream).
 

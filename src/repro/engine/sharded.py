@@ -35,6 +35,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.collectives import psum_partial
+from repro.dist.sharding import paged_attn_partition
 from repro.engine.backends import get_backend, register_backend
 from repro.engine.packed import PackedLinear, partition_kind
 
@@ -106,3 +107,77 @@ def _sharded(plan, lin: PackedLinear, x: jnp.ndarray, out_dtype):
         out_specs=P(*lead, None),
         check_rep=False,
     )(lin.packed, lin.scale, x)
+
+
+# ---------------------------------------------------------------------------
+# fused paged attention under shard_map (decode + chunked prefill)
+# ---------------------------------------------------------------------------
+
+
+def sharded_paged_attention(mesh, model_axis, qg, k_pages, v_pages,
+                            block_tables, pos, win, k_scale, v_scale, *,
+                            interpret: bool, prefill=None):
+    """shard_map the fused paged-attention kernel over the mesh.
+
+    KV heads are already the ``model``-sharded dim of the page pool
+    (``dist.sharding.cache_shardings``), and softmax is per-head, so each
+    per-shard kernel invocation runs on the contiguous head slice its
+    shard holds — no in-kernel collective.  Queries arrive grouped
+    (decode ``(B, Hkv, G, D)``, prefill ``(B, Hkv, Cp, G, D)``): axis 1
+    is the KV-head axis on both, so one head entry shards queries, pools
+    and scale pools alike.  Lanes (queries, block tables, positions)
+    shard over the data axes when the batch divides.
+
+    The *page* axis stays replicated inside the kernel: a lane's block
+    table may point at any physical page, so the pages-over-data placement
+    is undone (an all-gather over the data axes within each model group)
+    before the per-shard kernel runs — the same logical traffic the
+    gather backend's cross-shard ``jnp.take`` pays, without the gathered
+    view write/read.  Non-divisible heads/batch degrade to replication
+    (``paged_attn_partition``), never an error.
+
+    ``prefill``: None runs the decode kernel (``pos`` = ``cur_pos``);
+    a ``dict(seq_lens=..., chunk=..., block_q=...)`` runs the prefill
+    grid (``pos`` = ``pos0``).
+    """
+    from repro.kernels.paged_attention.kernel import (
+        paged_attention_pallas,
+        paged_prefill_pallas,
+    )
+
+    head, lane = paged_attn_partition(
+        mesh, model_axis, k_pages.shape[2], qg.shape[0])
+    q_tail = (None,) * (qg.ndim - 2)
+    q_spec = P(lane, head, *q_tail)
+    pool = P(None, None, head, None)
+    scale_p = P(None, None, head)
+    bt_s, lane_s, win_s = P(lane, None), P(lane), P(None)
+    quant = k_scale is not None
+
+    if prefill is None:
+        def run(qg, kp, vp, bt, pos, win, *scales):
+            ks, vs = scales if quant else (None, None)
+            return paged_attention_pallas(qg, kp, vp, bt, pos, win, ks, vs,
+                                          interpret=interpret)
+
+        in_specs = (q_spec, pool, pool, bt_s, lane_s, win_s)
+        operands = (qg, k_pages, v_pages, block_tables, pos, win)
+    else:
+        seq_lens = prefill["seq_lens"]
+        chunk, block_q = prefill["chunk"], prefill["block_q"]
+
+        def run(qg, kp, vp, bt, pos, seq, win, *scales):
+            ks, vs = scales if quant else (None, None)
+            return paged_prefill_pallas(qg, kp, vp, bt, pos, seq, win,
+                                        ks, vs, chunk=chunk,
+                                        block_q=block_q,
+                                        interpret=interpret)
+
+        in_specs = (q_spec, pool, pool, bt_s, lane_s, lane_s, win_s)
+        operands = (qg, k_pages, v_pages, block_tables, pos, seq_lens, win)
+    if quant:
+        in_specs = in_specs + (scale_p, scale_p)
+        operands = operands + (k_scale, v_scale)
+
+    return shard_map(run, mesh=mesh, in_specs=in_specs, out_specs=q_spec,
+                     check_rep=False)(*operands)

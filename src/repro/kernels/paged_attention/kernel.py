@@ -1,4 +1,5 @@
-"""Paged decode-attention Pallas kernel: read KV pages *in place*.
+"""Paged attention Pallas kernels (decode + chunked prefill): read KV
+pages *in place*.
 
 The gather-then-attend read path (``models.attention.gather_kv_pages`` +
 ``attend_decode``) materializes every lane's full logical KV view —
@@ -29,6 +30,16 @@ Structure (same online-softmax pattern as ``kernels.flash_attention``):
   the probabilities (``scores·s_k[t]``, ``p·s_v[t]`` — the same math as
   ``attend_decode_quant``), so the pool bytes stay 1 byte/element all the
   way to the MXU.
+
+:func:`paged_prefill_pallas` is the chunked-prefill twin: grid
+``(B, Hkv, q_blocks, kv_blocks)`` with the block-table walk innermost, the
+whole query chunk riding as ``(block_q, G)`` rows per step, and the
+per-lane chunk offsets (``pos0`` — tokens already resident from earlier
+chunks or a prefix-cache hit, ``seq_lens`` — total valid after this chunk)
+as scalar-prefetch operands, so causal masking over the unmatched suffix
+happens against *logical* positions while K/V still stream straight from
+pool pages.  This is what lets ``models.transformer.prefill_chunk`` stop
+materializing the gathered ``(B, T, Hkv, Dh)`` view per layer.
 """
 
 from __future__ import annotations
@@ -197,3 +208,174 @@ def paged_attention_pallas(
         interpret=interpret,
     )(block_tables.astype(jnp.int32), cur_pos.astype(jnp.int32),
       window, *operands)
+
+
+# ---------------------------------------------------------------------------
+# chunked-prefill mode: query blocks × KV blocks
+# ---------------------------------------------------------------------------
+
+
+def _prefill_body(bt_ref, pos0_ref, seq_ref, win_ref, q_ref, k_ref, v_ref,
+                  ks_ref, vs_ref, o_ref, m_ref, l_ref, *,
+                  scale: float, page: int, n_blocks: int, block_q: int,
+                  group: int, chunk: int, quant: bool):
+    """One (lane, kv-head, q-block, logical-kv-block) step.
+
+    The query block carries ``block_q`` chunk positions × ``group`` GQA
+    heads flattened to ``R = block_q·G`` rows; row ``r`` is chunk offset
+    ``r // G``, so its logical position is ``pos0[b] + iq·block_q + r//G``.
+    Valid KV for a row is the causal range below that position clipped to
+    ``limit = min(seq_lens[b], pos0[b] + chunk)`` — exactly the
+    ``kv_valid`` mask of the gather path (padded queries beyond ``limit``
+    still attend the lane's valid prefix, matching ``attend_dense``)."""
+    bb = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+    r = block_q * group
+
+    @pl.when(ik == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    if quant:
+        q = q_ref[0, 0].reshape(r, -1).astype(jnp.bfloat16)
+        q = q.astype(jnp.float32)                          # (R, D)
+        k = k_ref[0, :, 0, :].astype(jnp.bfloat16).astype(jnp.float32)
+        v = v_ref[0, :, 0, :].astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        # attend_dense upcasts q and the gathered K/V straight to f32
+        q = q_ref[0, 0].reshape(r, -1).astype(jnp.float32)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (page, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if quant:
+        s = s * ks_ref[0, :, 0].astype(jnp.float32)[None, :]
+
+    # logical positions: query row r sits at pos0 + iq*block_q + r//G,
+    # pool row t of this block at ik*page + t
+    qi = jax.lax.broadcasted_iota(jnp.int32, (r, page), 0) // group
+    q_pos = pos0_ref[bb] + iq * block_q + qi
+    kv_pos = ik * page + jax.lax.broadcasted_iota(jnp.int32, (r, page), 1)
+    limit = jnp.minimum(seq_ref[bb], pos0_ref[bb] + chunk)
+    win = win_ref[0]
+    mask = jnp.logical_and(kv_pos <= q_pos, kv_pos < limit)
+    mask = jnp.logical_and(
+        mask, jnp.where(win > 0, kv_pos > q_pos - win, True))
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_old = m_ref[0]                                       # (R,)
+    l_old = l_ref[0]
+    m_new = jnp.maximum(m_old, jnp.max(s, axis=-1))
+    corr = jnp.exp(m_old - m_new)
+    p = jnp.exp(s - m_new[:, None])                        # (R, page)
+    l_new = l_old * corr + jnp.sum(p, axis=-1)
+    if quant:
+        p = p * vs_ref[0, :, 0].astype(jnp.float32)[None, :]
+        p = p.astype(jnp.bfloat16).astype(jnp.float32)
+    else:
+        p = p.astype(v_ref.dtype).astype(jnp.float32)
+    o_old = o_ref[0, 0].reshape(r, -1)
+    o_new = o_old * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(ik == n_blocks - 1)
+    def _final():
+        o_ref[0, 0] = (o_new / jnp.maximum(l_new, 1e-30)[:, None]).reshape(
+            o_ref.shape[2:])
+
+    @pl.when(ik < n_blocks - 1)
+    def _accum():
+        o_ref[0, 0] = o_new.reshape(o_ref.shape[2:])
+
+
+def _pf_kernel_quant(bt_ref, pos0_ref, seq_ref, win_ref, q_ref, k_ref,
+                     v_ref, ks_ref, vs_ref, o_ref, m_ref, l_ref, **kw):
+    _prefill_body(bt_ref, pos0_ref, seq_ref, win_ref, q_ref, k_ref, v_ref,
+                  ks_ref, vs_ref, o_ref, m_ref, l_ref, quant=True, **kw)
+
+
+def _pf_kernel_full(bt_ref, pos0_ref, seq_ref, win_ref, q_ref, k_ref,
+                    v_ref, o_ref, m_ref, l_ref, **kw):
+    _prefill_body(bt_ref, pos0_ref, seq_ref, win_ref, q_ref, k_ref, v_ref,
+                  None, None, o_ref, m_ref, l_ref, quant=False, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_q",
+                                             "interpret"))
+def paged_prefill_pallas(
+    q: jnp.ndarray,            # (B, Hkv, Cp, G, Dh) — grouped chunk queries
+    k_pages: jnp.ndarray,      # (P, page, Hkv, Dh) — one layer's pool
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    pos0: jnp.ndarray,         # (B,) int32 tokens already resident
+    seq_lens: jnp.ndarray,     # (B,) int32 total valid after this chunk
+    window: jnp.ndarray,       # (1,) int32 (runtime scalar; <= 0 = full)
+    k_scale=None,              # (P, page, Hkv) — int8 pools only
+    v_scale=None,
+    *,
+    chunk: int,                # true (unpadded) chunk length C
+    block_q: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Fused paged chunked-prefill attention; ``(B, Hkv, Cp, G, Dh)`` f32.
+
+    ``q``'s chunk axis ``Cp`` must be a ``block_q`` multiple (the ops
+    wrapper pads; padded rows attend the lane's valid prefix and are
+    sliced off outside).  The chunk's own K/V must already be scattered
+    into the pool — the kernel is a pure read path, like decode.
+    """
+    b, hkv, cp, g, d = q.shape
+    page = k_pages.shape[1]
+    n_blocks = block_tables.shape[1]
+    nq = cp // block_q
+    scale = d ** -0.5
+    quant = k_scale is not None
+
+    def _at_page(bb, h, iq, ik, bt, pos0, seq, win):
+        return (bt[bb, ik], 0, h, 0)
+
+    def _at_scale(bb, h, iq, ik, bt, pos0, seq, win):
+        return (bt[bb, ik], 0, h)
+
+    def _at_q(bb, h, iq, ik, bt, pos0, seq, win):
+        return (bb, h, iq, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, block_q, g, d), _at_q),
+        pl.BlockSpec((1, page, 1, d), _at_page),
+        pl.BlockSpec((1, page, 1, d), _at_page),
+    ]
+    operands = [q, k_pages, v_pages]
+    kernel = _pf_kernel_full
+    if quant:
+        in_specs += [pl.BlockSpec((1, page, 1), _at_scale),
+                     pl.BlockSpec((1, page, 1), _at_scale)]
+        operands += [k_scale, v_scale]
+        kernel = _pf_kernel_quant
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, hkv, nq, n_blocks),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, block_q, g, d), _at_q),
+        scratch_shapes=[
+            pltpu.VMEM((1, block_q * g), jnp.float32),
+            pltpu.VMEM((1, block_q * g), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(kernel, scale=scale, page=page,
+                          n_blocks=n_blocks, block_q=block_q, group=g,
+                          chunk=chunk),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, cp, g, d), jnp.float32),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), pos0.astype(jnp.int32),
+      seq_lens.astype(jnp.int32), window, *operands)

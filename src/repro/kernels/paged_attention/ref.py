@@ -62,3 +62,52 @@ def paged_attention_ref(
                      vg.astype(acc_in),
                      preferred_element_type=jnp.float32)
     return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def paged_prefill_ref(
+    q: jnp.ndarray,            # (B, C, Hq, Dh) — one prefill chunk
+    k_pages: jnp.ndarray,      # (P, page, Hkv, Dh)
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    pos0: jnp.ndarray,         # (B,) tokens already resident
+    seq_lens: jnp.ndarray,     # (B,) total valid after this chunk
+    window=0,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Gather-then-attend chunked prefill: the standalone twin of the
+    ``attend_paged_prefill`` gather path (causal over logical positions,
+    KV clipped to ``min(seq_lens, pos0 + C)``)."""
+    b, c, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    kg = _gather(k_pages, block_tables)             # (B, T, Hkv, Dh)
+    vg = _gather(v_pages, block_tables)
+    t = kg.shape[1]
+    quant = k_scale is not None
+    acc_in = jnp.bfloat16 if quant else jnp.float32
+    qg = q.reshape(b, c, hkv, g, d).astype(acc_in)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kg.astype(acc_in),
+                    preferred_element_type=jnp.float32) * scale
+    if quant:
+        ksg = _gather(k_scale, block_tables)
+        sc = sc * ksg.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                             None, :]
+    q_pos = pos0[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    kv_pos = jnp.arange(t, dtype=jnp.int32)[None, :]
+    limit = jnp.minimum(seq_lens, pos0 + c)
+    causal = kv_pos[:, None, :] <= q_pos[:, :, None]     # (B, C, T)
+    near = kv_pos[:, None, :] > q_pos[:, :, None] - window
+    mask = jnp.logical_and(causal, jnp.where(window > 0, near, True))
+    mask = jnp.logical_and(mask, (kv_pos < limit[:, None])[:, None, :])
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    if quant:
+        vsg = _gather(v_scale, block_tables)
+        p = p * vsg.astype(jnp.float32).transpose(0, 2, 1)[:, :, None,
+                                                           None, :]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(acc_in),
+                     vg.astype(acc_in),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, c, hq, d).astype(q.dtype)

@@ -369,6 +369,8 @@ def attend_paged_decode(
     k_scale: Optional[jnp.ndarray] = None,  # (P, page, Hkv) int8 pools only
     v_scale: Optional[jnp.ndarray] = None,
     attn_backend: str = "gather",
+    mesh=None,
+    model_axis: str = "model",
 ) -> jnp.ndarray:
     """Single-token decode reading K/V through the block table.
 
@@ -386,13 +388,21 @@ def attend_paged_decode(
       BlockSpec index maps, pages are read from the pool exactly once and
       the gathered copy never exists; token-identity against ``gather``
       is pinned by ``tests/test_paged_attention.py``.
+
+    ``mesh`` (fused backends only): shard_map the kernel over
+    ``model_axis`` — each shard's kernel invocation runs on the
+    contiguous KV-head slice its pool shard already holds
+    (``repro.engine.sharded.sharded_paged_attention``).  The gather path
+    composes with a mesh through its sharding hints instead and ignores
+    these arguments.
     """
     if attn_backend in ("pallas_interpret", "pallas_tpu"):
         from repro.kernels.paged_attention.ops import paged_attention
 
         return paged_attention(q, k_pages, v_pages, block_tables, cur_pos,
                                window, k_scale, v_scale,
-                               attn_backend=attn_backend)
+                               attn_backend=attn_backend,
+                               mesh=mesh, model_axis=model_axis)
     if attn_backend != "gather":
         raise ValueError(f"unknown attention backend {attn_backend!r}")
     kg = gather_kv_pages(k_pages, block_tables)
@@ -402,3 +412,61 @@ def attend_paged_decode(
         vsg = gather_kv_pages(v_scale, block_tables)
         return attend_decode_quant(q, kg, vg, ksg, vsg, cur_pos, window)
     return attend_decode(q, kg, vg, cur_pos, window)
+
+
+@_scoped("attend_paged_prefill")
+def attend_paged_prefill(
+    q: jnp.ndarray,            # (B, C, Hq, D) — one prefill chunk
+    k_pages: jnp.ndarray,      # (P, page, Hkv, D) — one layer's pool
+    v_pages: jnp.ndarray,
+    block_tables: jnp.ndarray,  # (B, n_blocks) int32
+    positions: jnp.ndarray,    # (B, C) logical positions of the chunk
+    pos0: jnp.ndarray,         # (B,) tokens already resident per lane
+    seq_lens: jnp.ndarray,     # (B,) total valid after this chunk
+    window: int = 0,
+    k_scale: Optional[jnp.ndarray] = None,
+    v_scale: Optional[jnp.ndarray] = None,
+    attn_backend: str = "gather",
+    mesh=None,
+    model_axis: str = "model",
+) -> jnp.ndarray:
+    """One prefill chunk's attention reading K/V through the block table.
+
+    The chunk's K/V must already be scattered into the pool; lane ``b``'s
+    queries cover logical positions ``[pos0[b], pos0[b]+C)`` (suffix-only
+    prefill after a prefix-cache hit arrives with ``pos0`` mid-page) and
+    attend the lane's full resident prefix plus this chunk, causally,
+    clipped to ``limit = min(seq_lens, pos0 + C)``.
+
+    * ``gather`` — materialize the logical view, then :func:`attend_dense`
+      / :func:`attend_dense_quant` (the reference; carries sharding hints).
+    * ``pallas_interpret`` / ``pallas_tpu`` — the fused prefill grid
+      (``kernels.paged_attention.paged_prefill_pallas``): per-lane
+      ``pos0`` / ``seq_lens`` travel as scalar-prefetch operands and the
+      gathered ``(B, T, Hkv, D)`` view never exists.  With a ``mesh`` the
+      kernel shard_maps over ``model_axis`` like the decode path.
+    """
+    if attn_backend in ("pallas_interpret", "pallas_tpu"):
+        from repro.kernels.paged_attention.ops import paged_prefill_attention
+
+        return paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, pos0, seq_lens, window,
+            k_scale, v_scale, attn_backend=attn_backend,
+            mesh=mesh, model_axis=model_axis)
+    if attn_backend != "gather":
+        raise ValueError(f"unknown attention backend {attn_backend!r}")
+    b, c = q.shape[:2]
+    t_total = block_tables.shape[1] * k_pages.shape[1]
+    kv_pos = jnp.broadcast_to(
+        jnp.arange(t_total, dtype=jnp.int32)[None, :], (b, t_total))
+    limit = jnp.minimum(seq_lens, pos0 + c)
+    kv_valid = kv_pos < limit[:, None]
+    kg = gather_kv_pages(k_pages, block_tables)
+    vg = gather_kv_pages(v_pages, block_tables)
+    if k_scale is not None:
+        ksg = gather_kv_pages(k_scale, block_tables)
+        vsg = gather_kv_pages(v_scale, block_tables)
+        return attend_dense_quant(q, kg, vg, ksg, vsg, positions, kv_pos,
+                                  window, kv_valid=kv_valid)
+    return attend_dense(q, kg, vg, positions, kv_pos, window,
+                        kv_valid=kv_valid)

@@ -28,11 +28,10 @@ from repro.models.attention import (
     attend_decode,
     attend_decode_quant,
     attend_dense,
-    attend_dense_quant,
     attend_flash,
     attend_local_gather,
     attend_paged_decode,
-    gather_kv_pages,
+    attend_paged_prefill,
 )
 from repro.models.layers import (
     apply_rope,
@@ -857,6 +856,8 @@ def decode_step_paged(
     cfg: ModelConfig,
     eng: Optional[EngineConfig] = None,
     attn_backend: Optional[str] = None,
+    mesh=None,
+    model_axis: str = "model",
 ) -> Tuple[jnp.ndarray, Any]:
     """One token of autoregressive decode over paged KV.
 
@@ -866,13 +867,18 @@ def decode_step_paged(
     garbage K/V into the null page and their logits are ignored by the
     caller.  ``attn_backend`` overrides the plan's resolved decode-read
     path (``gather`` reference vs the fused in-place Pallas kernel); None
-    defers to the plan, and no plan means "auto".  Returns
+    defers to the plan, and no plan means "auto".  ``mesh`` /
+    ``model_axis`` shard_map the fused kernel over the pool's
+    heads-over-model placement (None defers to the plan's mesh; the
+    gather path uses its hints instead).  Returns
     ``(logits, new_pages)``.
     """
     eng = as_plan(eng)
     if attn_backend is None and eng is not None:
         attn_backend = eng.attn_backend
     attn_backend = resolve_attn_backend(attn_backend)
+    if mesh is None and eng is not None:
+        mesh, model_axis = eng.mesh, eng.model_axis
     b = tokens.shape[0]
     dh, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     if cfg.family == "audio":
@@ -912,13 +918,15 @@ def decode_step_paged(
                 vs_new.astype(xs["vs"].dtype))
             o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win,
                                     k_scale=nks, v_scale=nvs,
-                                    attn_backend=attn_backend)
+                                    attn_backend=attn_backend,
+                                    mesh=mesh, model_axis=model_axis)
             ys["ks"], ys["vs"] = nks, nvs
         else:
             nkp = kp.at[pidx, poff].set(k[:, 0].astype(kp.dtype))
             nvp = vp.at[pidx, poff].set(v[:, 0].astype(vp.dtype))
             o = attend_paged_decode(q, nkp, nvp, block_tables, pos, win,
-                                    attn_backend=attn_backend)
+                                    attn_backend=attn_backend,
+                                    mesh=mesh, model_axis=model_axis)
         o = dense(lp["attn"]["wo"], o.reshape(b, 1, hq * dh), eng)
         x = x + o
         if cfg.family == "moe":
@@ -949,6 +957,9 @@ def prefill_chunk(
     seq_lens: jnp.ndarray,               # (B,) total valid after this chunk
     cfg: ModelConfig,
     eng: Optional[EngineConfig] = None,
+    attn_backend: Optional[str] = None,
+    mesh=None,
+    model_axis: str = "model",
 ) -> Tuple[jnp.ndarray, Any]:
     """One batched chunk of prompt prefill against paged KV.
 
@@ -956,12 +967,22 @@ def prefill_chunk(
     ``[pos0[b], seq_lens[b])``; trailing chunk padding (and idle lanes,
     ``seq_lens == pos0``) is masked — padded K/V lands in the null page
     and padded queries attend nothing real.  Attention sees the lane's
-    *full* gathered prefix (pages written by earlier chunks) plus this
-    chunk, so running ``prefill_chunk`` to completion over any chunk size
-    matches the one-shot :func:`prefill` numerics.  Returns
+    *full* resident prefix (pages written by earlier chunks or shared via
+    the prefix cache) plus this chunk, so running ``prefill_chunk`` to
+    completion over any chunk size matches the one-shot :func:`prefill`
+    numerics.  ``attn_backend`` picks the read path like on the decode
+    step: ``gather`` materializes the logical view per layer; the fused
+    backends run the in-kernel prefill grid
+    (:func:`repro.models.attention.attend_paged_prefill`) and the
+    gathered ``(B, T, Hkv, Dh)`` view never exists.  Returns
     ``(last-valid-token logits (B, 1, V...), new_pages)``.
     """
     eng = as_plan(eng)
+    if attn_backend is None and eng is not None:
+        attn_backend = eng.attn_backend
+    attn_backend = resolve_attn_backend(attn_backend)
+    if mesh is None and eng is not None:
+        mesh, model_axis = eng.mesh, eng.model_axis
     c = tokens.shape[1]
     dh, hq, hkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     positions = pos0[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
@@ -973,11 +994,6 @@ def prefill_chunk(
     quant = pages.k_scale is not None
     pidx, poff = _scatter_targets(block_tables, positions, valid_q,
                                   pages.page_size)
-    t_total = block_tables.shape[1] * pages.page_size
-    kv_pos = jnp.broadcast_to(jnp.arange(t_total, dtype=jnp.int32)[None, :],
-                              (b, t_total))
-    limit = jnp.minimum(seq_lens, pos0 + c)
-    kv_valid = kv_pos < limit[:, None]
     windows = _layer_windows(cfg)
 
     def body(x, xs):
@@ -999,25 +1015,22 @@ def prefill_chunk(
                 ks_new.astype(xs["ks"].dtype))
             nvs = xs["vs"].at[pidx, poff].set(
                 vs_new.astype(xs["vs"].dtype))
-            # the gathered view stays int8 — scales fold into the
-            # probabilities per block (attend_dense_quant), matching the
-            # decode path's attend_decode_quant math.  The old code
-            # dequantized the whole gathered view to fp32 here, allocating
-            # 4× the cache bytes per chunk.
-            kg = gather_kv_pages(nkp, block_tables)
-            vg = gather_kv_pages(nvp, block_tables)
-            ksg = gather_kv_pages(nks, block_tables)
-            vsg = gather_kv_pages(nvs, block_tables)
-            o = attend_dense_quant(q, kg, vg, ksg, vsg, positions, kv_pos,
-                                   win, kv_valid=kv_valid)
+            # scales stay folded into the probabilities on both read
+            # paths (attend_dense_quant math == the fused grid's in-VMEM
+            # folding) — the int8 view is never dequantized wholesale.
+            o = attend_paged_prefill(q, nkp, nvp, block_tables, positions,
+                                     pos0, seq_lens, win,
+                                     k_scale=nks, v_scale=nvs,
+                                     attn_backend=attn_backend,
+                                     mesh=mesh, model_axis=model_axis)
             ys["ks"], ys["vs"] = nks, nvs
         else:
             nkp = kp.at[pidx, poff].set(k.astype(kp.dtype))
             nvp = vp.at[pidx, poff].set(v.astype(vp.dtype))
-            kg = gather_kv_pages(nkp, block_tables)
-            vg = gather_kv_pages(nvp, block_tables)
-            o = attend_dense(q, kg, vg, positions, kv_pos, win,
-                             kv_valid=kv_valid)
+            o = attend_paged_prefill(q, nkp, nvp, block_tables, positions,
+                                     pos0, seq_lens, win,
+                                     attn_backend=attn_backend,
+                                     mesh=mesh, model_axis=model_axis)
         o = dense(lp["attn"]["wo"], o.reshape(b, c, hq * dh), eng)
         x = x + o
         if cfg.family == "moe":

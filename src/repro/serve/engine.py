@@ -141,11 +141,14 @@ class ServeEngine:
     smaller pools trade preemptions for memory, admission is always
     capacity-checked).
 
-    ``attn_backend``: paged decode-attention read path — ``gather`` (the
-    materialize-then-attend reference) or the fused in-place Pallas kernel
-    (``pallas_interpret`` / ``pallas_tpu``).  None defers to the resolved
-    plan (``EngineConfig.attn_backend``), whose ``"auto"`` picks the
-    kernel on TPU and ``gather`` elsewhere.
+    ``attn_backend``: paged-attention read path for decode *and* chunked
+    prefill — ``gather`` (the materialize-then-attend reference) or the
+    fused in-place Pallas kernel (``pallas_interpret`` / ``pallas_tpu``,
+    which also runs the in-kernel prefill grid).  None defers to the
+    resolved plan (``EngineConfig.attn_backend``), whose ``"auto"`` picks
+    the kernel on TPU — including mesh-carrying engines, where it
+    shard_maps over the pool's heads-over-model placement — and
+    ``gather`` elsewhere.
 
     ``prefix_cache``: share KV pages across requests
     (:mod:`repro.serve.prefix_cache`) — prompts are matched against a
@@ -210,12 +213,13 @@ class ServeEngine:
         self.max_len = max_len
         self.key = jax.random.PRNGKey(seed)
         self.kv_bits = self.plan.kv_bits if self.plan is not None else 0
-        # the paged decode-attention read path (gather reference vs the
-        # fused in-place kernel): explicit kwarg beats the plan beats the
-        # raw EngineConfig (which still carries attn_backend when the
-        # engine itself is disabled and the plan resolves to None).  The
-        # mesh rides into resolution: "auto" on a mesh stays gather (the
-        # kernel is not shard_mapped over the sharded pool yet).
+        # the paged-attention read path (gather reference vs the fused
+        # in-place kernel, decode and chunked prefill alike): explicit
+        # kwarg beats the plan beats the raw EngineConfig (which still
+        # carries attn_backend when the engine itself is disabled and the
+        # plan resolves to None).  "auto" resolves by host (TPU → fused)
+        # with or without a mesh — on a mesh the kernel shard_maps over
+        # the pool's heads-over-model placement.
         self.attn_backend = resolve_attn_backend(
             attn_backend
             or (self.plan.attn_backend if self.plan is not None
@@ -329,19 +333,23 @@ class ServeEngine:
 
             # the page pool is donated: each step scatters into it and the
             # old value is dropped, so XLA may update the buffers in place
-            # instead of copying the whole pool per token/chunk
+            # instead of copying the whole pool per token/chunk.  The mesh
+            # rides in explicitly (the plan may be None on a meshed
+            # engine) so the fused kernel can shard_map over it.
             abk_ = self.attn_backend
+            mesh_ = mesh
 
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _dec(params, pages, bt, pos, active, tokens):
                 return decode_step_paged(params, pages, bt, pos, active,
                                          tokens, cfg_, plan_,
-                                         attn_backend=abk_)
+                                         attn_backend=abk_, mesh=mesh_)
 
             @functools.partial(jax.jit, donate_argnums=(1,))
             def _pf(params, pages, bt, tokens, pos0, seq_lens):
                 return _prefill_chunk_fn(params, pages, bt, tokens, pos0,
-                                         seq_lens, cfg_, plan_)
+                                         seq_lens, cfg_, plan_,
+                                         attn_backend=abk_, mesh=mesh_)
 
             self._decode_paged = _dec
             self._prefill_paged = _pf

@@ -6,7 +6,11 @@ through the block table; these tests pin that the read path is a pure
 relocation of bytes — page size × GQA group × sliding window × kv_bits
 sweeps, a ragged last block, block tables reshuffled as preemption
 free/re-alloc would leave them, and end-to-end greedy serving (including
-under real preemption, reusing the ``test_serve_paged`` geometry)."""
+under real preemption, reusing the ``test_serve_paged`` geometry).  The
+in-kernel chunked-prefill grid gets the same treatment: ragged last
+pages, mid-page ``pos0`` (a prefix-cache match ending inside a page),
+int8 pools and sliding-window layers, each pinned against the gather
+prefill path that materializes the KV view."""
 
 import itertools
 
@@ -17,10 +21,17 @@ import pytest
 
 from repro.config.base import EngineConfig, ServeConfig
 from repro.engine import ATTN_BACKENDS, EnginePlan, resolve_attn_backend
-from repro.kernels.paged_attention.ops import decode_attn_bytes
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.paged_attention.ops import (
+    decode_attn_bytes,
+    prefill_attn_bytes,
+    synthetic_prefill_case,
+)
+from repro.kernels.paged_attention.ref import (
+    paged_attention_ref,
+    paged_prefill_ref,
+)
 from repro.models import init_params
-from repro.models.attention import attend_paged_decode
+from repro.models.attention import attend_paged_decode, attend_paged_prefill
 from repro.serve import ServeEngine
 
 from conftest import reduced_f32
@@ -133,6 +144,82 @@ def test_fused_invariant_under_page_reshuffle():
     np.testing.assert_array_equal(f1, f2)
 
 
+# ------------------------------------------------- in-kernel prefill grid
+def _both_prefill(case, window=0):
+    """(gather, fused) outputs of ``attend_paged_prefill`` on one case."""
+    b, c = case["q"].shape[:2]
+    positions = case["pos0"][:, None] + jnp.arange(c, dtype=jnp.int32)[None]
+    args = (case["q"], case["k_pages"], case["v_pages"],
+            case["block_tables"], positions, case["pos0"], case["seq_lens"],
+            window, case["k_scale"], case["v_scale"])
+    a = attend_paged_prefill(*args, attn_backend="gather")
+    f = attend_paged_prefill(*args, attn_backend="pallas_interpret")
+    return np.asarray(a), np.asarray(f)
+
+
+@pytest.mark.parametrize("window,kv_bits",
+                         [(0, 0), (6, 0), (0, 8), (6, 8)])
+def test_prefill_fused_matches_gather(window, kv_bits):
+    """The prefill grid == the gather prefill path across sliding window ×
+    kv_bits, on the standard synthetic case: every lane's ``pos0`` lands
+    mid-page (a prefix-cache match offset, not page-aligned) and the last
+    lane's chunk is ragged (``seq_lens < pos0 + chunk``)."""
+    rng = np.random.default_rng(17)
+    case = synthetic_prefill_case(rng, batch=3, nblk=5, page=4, hkv=2,
+                                  group=2, dh=16, chunk=6, kv_bits=kv_bits)
+    a, f = _both_prefill(case, window)
+    tol = 1e-2 if kv_bits else 1e-5
+    np.testing.assert_allclose(a, f, rtol=tol, atol=tol)
+
+
+def test_prefill_fused_ragged_last_page():
+    """A chunk whose final KV page is mostly unwritten: the in-kernel
+    ``kv_pos < limit`` mask must drop exactly the unwritten tail — one
+    valid token on the last page, the rest garbage the gather path never
+    materializes."""
+    rng = np.random.default_rng(23)
+    page, chunk = 4, 9            # pos0=0 → last page holds 1 of 4 slots
+    case = synthetic_prefill_case(rng, batch=1, nblk=4, page=page, hkv=2,
+                                  group=1, dh=8, chunk=chunk, kv_bits=0)
+    case["pos0"] = jnp.zeros_like(case["pos0"])
+    case["seq_lens"] = jnp.full_like(case["seq_lens"], chunk)
+    a, f = _both_prefill(case)
+    np.testing.assert_allclose(a, f, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_fused_midpage_pos0():
+    """Suffix-only prefill after a prefix-cache hit that ends *inside* a
+    page: ``pos0`` is not page-aligned, so the first query row attends a
+    partially-filled page and the causal mask starts mid-page."""
+    rng = np.random.default_rng(29)
+    page = 4
+    case = synthetic_prefill_case(rng, batch=2, nblk=5, page=page, hkv=2,
+                                  group=2, dh=8, chunk=5, kv_bits=0)
+    pos0 = jnp.asarray([page + 2, 2 * page + 3], jnp.int32)  # both mid-page
+    case["pos0"] = pos0
+    case["seq_lens"] = pos0 + 5
+    a, f = _both_prefill(case)
+    np.testing.assert_allclose(a, f, rtol=1e-5, atol=1e-5)
+
+
+def test_prefill_fused_matches_standalone_ref():
+    """The kernel package's own prefill gather reference (no repro.models
+    import) agrees — benches can diff against it directly."""
+    rng = np.random.default_rng(31)
+    case = synthetic_prefill_case(rng, batch=2, nblk=4, page=4, hkv=2,
+                                  group=2, dh=8, chunk=6, kv_bits=0)
+    ref = paged_prefill_ref(case["q"], case["k_pages"], case["v_pages"],
+                            case["block_tables"], case["pos0"],
+                            case["seq_lens"], 0, None, None)
+    _, f = _both_prefill(case)
+    b, c = case["q"].shape[:2]
+    valid = np.asarray(case["seq_lens"] - case["pos0"])  # per-lane real rows
+    for lane in range(b):
+        np.testing.assert_allclose(np.asarray(ref)[lane, :valid[lane]],
+                                   f[lane, :valid[lane]],
+                                   rtol=1e-5, atol=1e-5)
+
+
 # --------------------------------------------------- end-to-end serving
 def _serve(cfg, params, abk, *, engine=None, max_new=5, n_slots=2,
            max_len=32, **kw):
@@ -170,6 +257,38 @@ def test_serve_token_identity_sliding_window(rng):
     assert ref == fused
 
 
+@pytest.mark.parametrize("kv_bits", [0, 8])
+def test_serve_token_identity_with_prefix_cache(rng, kv_bits):
+    """Prefix-cache hits feed the in-kernel prefill grid a mid-page
+    ``pos0`` (the B prompt's match ends 2 tokens into a page): cache-hit
+    suffix-only prefill through the fused kernel matches the gather
+    backend token for token, and the hit path really ran."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    a = list(range(1, 13))
+    prompts = [a, list(range(1, 11)) + [99, 100], list(a), [71, 72, 73]]
+    engine = (EngineConfig(kv_bits=kv_bits, backend="reference")
+              if kv_bits else None)
+
+    def gen(abk):
+        scfg = ServeConfig(max_new_tokens=5, engine=engine or EngineConfig())
+        # n_slots=1 serializes admission so B and C find A's pages
+        # committed (their matches end mid-page: 10 and 11 tokens)
+        eng = ServeEngine(cfg, params, scfg, n_slots=1, max_len=32,
+                          mode="paged", attn_backend=abk, page_size=4,
+                          prefill_chunk=3, prefix_cache=True)
+        for p in prompts:
+            eng.submit(list(p))
+        return eng, [r.output for r in sorted(eng.run(),
+                                              key=lambda r: r.rid)]
+
+    ref_eng, ref = gen("gather")
+    fused_eng, fused = gen("pallas_interpret")
+    assert fused_eng.prefix_stats()["hits"] >= 2
+    assert ref_eng.prefix_stats() == fused_eng.prefix_stats()
+    assert ref == fused
+
+
 def test_serve_token_identity_under_preemption(rng):
     """The test_serve_paged preemption geometry (pool too small for all
     residents), decoded through the fused kernel: recompute-resume with
@@ -201,19 +320,23 @@ def test_plan_resolves_attn_backend():
     assert resolve_attn_backend(None) in ATTN_BACKENDS
 
 
-def test_auto_resolves_to_gather_on_mesh():
-    """'auto' on a mesh-carrying plan stays on the gather path (the fused
-    kernel is not shard_mapped over the sharded pool yet); an explicit
-    pallas name is honored as the caller's opt-in."""
+def test_auto_no_longer_downgrades_on_mesh():
+    """'auto' resolves identically with and without a mesh: the fused
+    kernel shard_maps over the pool's model axis now, so a mesh-carrying
+    TPU plan runs fused by default (the old downgrade of auto-on-mesh to
+    gather is gone).  On this host that means both resolve to the same
+    host default; an explicit pallas name is still honored anywhere."""
     from repro.dist import make_mesh
 
     mesh = make_mesh((1, 1), ("data", "model"))
+    assert (resolve_attn_backend("auto", mesh=mesh)
+            == resolve_attn_backend("auto"))
     plan = EnginePlan(backend="reference", bits=8, mesh=mesh)
-    assert plan.attn_backend == "gather"
+    flat = EnginePlan(backend="reference", bits=8)
+    assert plan.attn_backend == flat.attn_backend  # mesh changes nothing
     pinned = EnginePlan(backend="reference", bits=8, mesh=mesh,
                         attn_backend="pallas_interpret")
     assert pinned.attn_backend == "pallas_interpret"
-    assert resolve_attn_backend("auto", mesh=mesh) == "gather"
 
 
 def test_serve_engine_honors_config_attn_backend(rng):
@@ -247,3 +370,22 @@ def test_bytes_model_fused_below_gather():
             # the win is the dropped view write + re-read: ~3x on the
             # KV term, diluted only by the shared Q/O traffic
             assert gather - fused > gather / 3
+
+
+def test_prefill_bytes_model_fused_below_gather():
+    """Same self-consistency guard for the chunked-prefill traffic model:
+    in-kernel prefill never materializes the gathered (B, T, Hkv, Dh)
+    view, so its modeled bytes sit below gather at every context — and
+    once the context dwarfs the chunk (the KV view term dominating the
+    shared Q/O traffic) the dropped write + re-read is most of the
+    total, same ~3x-on-the-view win as decode."""
+    for kv_bits in (0, 8):
+        for context in (16, 64, 512, 4096):
+            kw = dict(batch=4, chunk=16, context=context, n_kv_heads=4,
+                      head_dim=64, n_q_heads=8, page_size=4,
+                      kv_bits=kv_bits)
+            gather = prefill_attn_bytes("gather", **kw)
+            fused = prefill_attn_bytes("pallas_interpret", **kw)
+            assert fused < gather, (kv_bits, context, fused, gather)
+            if context >= 32 * kw["chunk"]:  # view-dominated regime
+                assert gather - fused > gather / 3

@@ -297,6 +297,69 @@ def test_paged_serving_on_mesh_token_identical():
     """)
 
 
+def test_fused_attn_on_mesh_token_identical():
+    """The fused paged-attention kernel shard_mapped over the (4, 2) mesh
+    (KV heads over model, lanes over data) is token-identical to the
+    gather backend on the same mesh — decode and in-kernel chunked
+    prefill, kv_bits 0/8, under preemption, and through prefix-cache
+    hits whose suffix-only prefill starts mid-page."""
+    _run_sub("""
+    from conftest import reduced_f32
+    from repro.config.base import EngineConfig, ServeConfig
+    from repro.dist import make_mesh
+    from repro.models import init_params
+    from repro.serve import ServeEngine
+
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    PROMPTS = [[1, 2, 3], [4], [5, 6], [7, 8, 9, 10]]
+    mesh = make_mesh((4, 2), ("data", "model"))
+
+    def gen(abk, prompts=PROMPTS, kv_bits=0, n_slots=4, n_pages=None,
+            max_new=6, prefix_cache=False):
+        engine = (EngineConfig(kv_bits=kv_bits, backend="reference")
+                  if kv_bits else EngineConfig())
+        scfg = ServeConfig(max_new_tokens=max_new, engine=engine)
+        eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=32,
+                          mode="paged", page_size=4, n_pages=n_pages,
+                          prefill_chunk=3, mesh=mesh, attn_backend=abk,
+                          prefix_cache=prefix_cache)
+        for p in prompts:
+            eng.submit(list(p))
+        return eng, [r.output for r in sorted(eng.run(),
+                                              key=lambda r: r.rid)]
+
+    for kv_bits in (0, 8):
+        eng, ref = gen("gather", kv_bits=kv_bits)
+        _, fused = gen("pallas_interpret", kv_bits=kv_bits)
+        kspec = eng.pages.k.sharding.spec
+        assert "model" in str(kspec), kspec  # pool really head-sharded
+        assert ref == fused, (kv_bits, ref, fused)
+        print("fused==gather on mesh, kv_bits", kv_bits)
+
+    # preemption: 12 pages cannot hold 4 residents at max_new=16
+    e_ref, ref_p = gen("gather", n_pages=12, max_new=16)
+    e_fus, fused_p = gen("pallas_interpret", n_pages=12, max_new=16)
+    assert e_ref.preemptions > 0 and e_fus.preemptions > 0
+    assert ref_p == fused_p
+    print("preemption OK:", e_fus.preemptions, "preemptions")
+
+    # prefix-cache: serialized admission so the repeats hit; the matches
+    # end mid-page, so fused suffix-only prefill starts at a non-aligned
+    # pos0 inside the shard_mapped grid
+    a = list(range(1, 13))
+    pc_prompts = [a, list(range(1, 11)) + [99, 100], list(a)]
+    e_ref, ref_c = gen("gather", prompts=pc_prompts, n_slots=1,
+                       prefix_cache=True)
+    e_fus, fused_c = gen("pallas_interpret", prompts=pc_prompts,
+                         n_slots=1, prefix_cache=True)
+    assert e_fus.prefix_stats()["hits"] >= 2, e_fus.prefix_stats()
+    assert e_ref.prefix_stats() == e_fus.prefix_stats()
+    assert ref_c == fused_c
+    print("prefix-cache on mesh OK:", e_fus.prefix_stats()["hits"], "hits")
+    """)
+
+
 def test_paged_serving_sharded_weights_on_mesh():
     """Full mesh-native stack: int8 bit-planed weights through the
     ``sharded`` backend + the sharded page pool, vs the same quantized
