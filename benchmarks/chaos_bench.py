@@ -1,0 +1,206 @@
+#!/usr/bin/env python
+"""Robustness benchmark: auditor overhead, recovery drill, chaos storm.
+
+Three claims from the fault-tolerance subsystem, priced and gated:
+
+  * **audit overhead** — the runtime invariant auditor
+    (``ServeConfig(audit=1)``: full allocator / prefix-cache /
+    scheduler proof after every engine step) serves the identical
+    closed-loop workload within 5% of the audit-off throughput.  Reps
+    interleave off/on so host drift hits both arms equally; best-of-
+    reps walls are compared.
+
+  * **recovery drill** — kill the engine at step *k*, persist a
+    crash-consistent snapshot through ``repro.ckpt``, restore into a
+    fresh engine, drain: greedy outputs token-identical to the
+    uninterrupted run (the serving analogue of bit-exact training
+    resume).
+
+  * **chaos storm** — a seeded :class:`repro.ft.ChaosInjector` fires
+    page-grant failures, simulated step faults, NaN logits and preempt
+    storms across the run with the auditor at level 1: every request
+    untouched by a quarantine retires with tokens identical to the
+    calm run, and the auditor never trips.
+
+Results land in ``BENCH_chaos.json`` plus the repo-standard CSV rows.
+
+  PYTHONPATH=src python benchmarks/chaos_bench.py            # full run
+  PYTHONPATH=src python benchmarks/chaos_bench.py --smoke    # CI-sized
+"""
+
+import argparse
+import json
+import tempfile
+
+try:
+    from benchmarks.common import (build_model, make_engine,
+                                   wall_timer, write_bench)
+except ImportError:  # executed as a loose script
+    from common import build_model, make_engine, wall_timer, write_bench
+
+AUDIT_BUDGET = 0.05  # audit-on may cost at most 5% tok/s
+
+
+def _workload(cfg, n_reqs: int, prompt_len: int):
+    return [
+        [(11 * i + j) % cfg.vocab_size for j in range(prompt_len + i % 4)]
+        for i in range(n_reqs)
+    ]
+
+
+def _serve_once(cfg, params, prompts, tag, **kw):
+    eng = make_engine(cfg, params, **kw)
+    for p in prompts:
+        eng.submit(list(p))
+    with wall_timer(None) as w:
+        done = eng.run()
+    gen = sum(len(r.output) for r in done)
+    outs = {r.rid: list(r.output) for r in done}
+    return {
+        "arm": tag,
+        "gen_tokens": gen,
+        "wall_s": round(w.wall, 5),
+        "tok_per_s": round(gen / w.wall, 2) if w.wall > 0 else 0.0,
+    }, outs, eng
+
+
+def _recovery_drill(cfg, params, prompts, *, kill_step, **kw):
+    """Token identity through kill -> disk snapshot -> restore."""
+    eng = make_engine(cfg, params, **kw)
+    for p in prompts:
+        eng.submit(list(p))
+    with tempfile.TemporaryDirectory() as d:
+        for _ in range(kill_step):
+            eng.step()
+        eng.save_snapshot(d, kill_step)
+        ref = {r.rid: list(r.output) for r in eng.run()}
+
+        fresh = make_engine(cfg, params, **kw)
+        fresh.load_snapshot(d)
+        fresh.audit()
+        got = {r.rid: list(r.output) for r in fresh.run()}
+    return ref == got
+
+
+def _chaos_storm(cfg, params, prompts, calm, *, seed, **kw):
+    """Seeded storm with the auditor on; returns (ok, summary)."""
+    from repro.ft import ChaosInjector
+
+    ch = ChaosInjector(seed=seed,
+                       rates={"page_grant": 0.05, "step_fault": 0.05,
+                              "nan_logits": 0.03, "preempt_storm": 0.02})
+    eng = make_engine(cfg, params, audit=1, chaos=ch,
+                      max_request_retries=2, **kw)
+    for p in prompts:
+        eng.submit(list(p))
+    done = eng.run()  # AuditError here fails the bench outright
+    eng.audit()
+    unaffected_ok = all(
+        list(r.output) == calm[r.rid]
+        for r in done if r.finish_reason != "error")
+    retired = sum(1 for r in done if r.finish_reason != "error")
+    return unaffected_ok, {
+        "faults_fired": ch.summary(),
+        "quarantined": eng.quarantined,
+        "retired_clean": retired,
+        "n_requests": len(prompts),
+    }
+
+
+def run(arch: str = "qwen2.5-3b", n_reqs: int = 16, n_slots: int = 4,
+        prompt_len: int = 12, max_new: int = 8, max_len: int = 64,
+        reps: int = 6, kill_step: int = 3, out: str = "BENCH_chaos.json"):
+    """Bench entry point (also registered in benchmarks.run).  Returns
+    the repo-standard (name, us_per_call, derived) CSV rows."""
+    cfg, params = build_model(arch)
+    prompts = _workload(cfg, n_reqs, prompt_len)
+    kw = dict(n_slots=n_slots, max_len=max_len, max_new=max_new,
+              prefix_cache=True)
+
+    # one throwaway pass warms process-global jit state for both arms
+    _serve_once(cfg, params, prompts[:2], "warm", **kw)
+
+    best, outs = {}, {}
+    for _ in range(reps):
+        for tag, audit in (("audit_off", 0), ("audit_on", 1)):
+            res, o, _ = _serve_once(cfg, params, prompts, tag,
+                                    audit=audit, **kw)
+            outs.setdefault(tag, o)
+            assert o == outs[tag], f"{tag} arm tokens drifted across reps"
+            if tag not in best or res["wall_s"] < best[tag]["wall_s"]:
+                best[tag] = res
+
+    identical = outs["audit_off"] == outs["audit_on"]
+    tok_off = best["audit_off"]["tok_per_s"]
+    tok_on = best["audit_on"]["tok_per_s"]
+    overhead_ok = tok_on >= (1.0 - AUDIT_BUDGET) * tok_off
+
+    recovered = _recovery_drill(cfg, params, prompts,
+                                kill_step=kill_step, **kw)
+    storm_ok, storm = _chaos_storm(cfg, params, prompts,
+                                   outs["audit_off"], seed=17, **kw)
+
+    rows = [
+        (f"chaos_{tag}",
+         round(1e6 * r["wall_s"] / max(r["gen_tokens"], 1), 1),
+         f"tok/s={r['tok_per_s']}")
+        for tag, r in best.items()
+    ]
+    record = {
+        "bench": "chaos",
+        "arch": arch,
+        "reduced": True,
+        "dtype": "float32",
+        "workload": {"n_reqs": n_reqs, "n_slots": n_slots,
+                     "prompt_len": prompt_len, "max_new": max_new,
+                     "max_len": max_len, "reps": reps,
+                     "kill_step": kill_step},
+        "results": list(best.values()),
+        "on_over_off_tok_per_s": round(tok_on / max(tok_off, 1e-9), 4),
+        "audit_budget": AUDIT_BUDGET,
+        "audit_within_budget": bool(overhead_ok),
+        "token_identical": bool(identical),
+        "recovery_token_identical": bool(recovered),
+        "storm_unaffected_identical": bool(storm_ok),
+        "storm": storm,
+    }
+    write_bench(out, record)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests, short generations")
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        rows = run(n_reqs=8, max_new=5, reps=4, out=args.out)
+    else:
+        rows = run(out=args.out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(",".join(str(v) for v in row))
+
+    with open(args.out) as f:
+        record = json.load(f)
+    for gate, msg in (
+            ("token_identical", "the auditor changed generated tokens"),
+            ("recovery_token_identical",
+             "snapshot/restore changed generated tokens"),
+            ("storm_unaffected_identical",
+             "chaos storm changed tokens of unaffected requests")):
+        if not record[gate]:
+            raise SystemExit(msg)
+    if not record["audit_within_budget"]:
+        raise SystemExit(
+            f"audit-on throughput {record['on_over_off_tok_per_s']:.4f}x "
+            f"off exceeds the {record['audit_budget']:.0%} budget")
+    print(f"# audit on/off tok/s={record['on_over_off_tok_per_s']}  "
+          f"recovery={record['recovery_token_identical']}  "
+          f"storm={record['storm']}")
+
+
+if __name__ == "__main__":
+    main()

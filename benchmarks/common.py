@@ -89,13 +89,17 @@ def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
                 max_new=8, kv_bits=0, page_size=8, prefill_chunk=16,
                 n_pages=0, prefix_cache=False, sched="fcfs",
                 step_tokens=0, max_queue=0, warm=True, telemetry=None,
-                attn_backend=None):
+                attn_backend=None, audit=0, chaos=None,
+                max_request_retries=1):
     """A ``ServeEngine`` with the bench-standard knobs, optionally with
     the jits warmed on a tiny throwaway request (so compilation is never
     billed to the first mode measured).  ``telemetry``: an explicit
     ``repro.obs`` Telemetry/NullTelemetry for this engine (None defers
     to the process-wide switch).  ``attn_backend``: pin the paged
-    attention read path (None defers to the plan's ``auto``)."""
+    attention read path (None defers to the plan's ``auto``).
+    ``audit`` / ``chaos`` / ``max_request_retries``: the robustness
+    knobs (invariant auditor level, a ``repro.ft.ChaosInjector``, and
+    the per-request retry budget) for the chaos bench."""
     from repro.config.base import EngineConfig, ServeConfig
     from repro.serve import ServeEngine
 
@@ -103,10 +107,12 @@ def make_engine(cfg, params, *, n_slots, max_len, mode="paged",
         max_new_tokens=max_new,
         engine=EngineConfig(kv_bits=kv_bits, backend="reference"),
         page_size=page_size, prefill_chunk=prefill_chunk, n_pages=n_pages,
-        sched=sched, step_tokens=step_tokens, max_queue=max_queue)
+        sched=sched, step_tokens=step_tokens, max_queue=max_queue,
+        audit=audit, max_request_retries=max_request_retries)
     eng = ServeEngine(cfg, params, scfg, n_slots=n_slots, max_len=max_len,
                       mode=mode, prefix_cache=prefix_cache,
-                      telemetry=telemetry, attn_backend=attn_backend)
+                      telemetry=telemetry, attn_backend=attn_backend,
+                      chaos=chaos)
     if warm:
         eng.submit([cfg.vocab_size - 1] * 4, max_new_tokens=2)
         eng.run()

@@ -12,6 +12,7 @@ import sys
 def main() -> None:
     from benchmarks import (
         attn_bench,
+        chaos_bench,
         engine_model,
         fig4_scaling,
         fig6_latency,
@@ -40,6 +41,7 @@ def main() -> None:
         "prefix": prefix_bench.run,
         "load": load_bench.run,
         "obs": obs_bench.run,
+        "chaos": chaos_bench.run,
     }
     from benchmarks.common import bench_env
 

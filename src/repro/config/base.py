@@ -352,6 +352,18 @@ class ServeConfig:
     ``max_queue``: bounded admission queue — ``submit`` rejects with
     :class:`repro.serve.engine.AdmissionRejected` when this many
     requests are already waiting; 0 = unbounded (never sheds).
+    ``audit``: runtime invariant auditing (``docs/robustness.md``) —
+    0 = off, 1 = allocator + prefix-cache + scheduler audit after every
+    engine step, 2 = additionally after every phase *within* a step
+    (admit / prefill / decode / retire; pinpoints which phase corrupted
+    state).  An audit failure raises
+    :class:`repro.serve.pages.AuditError`; paged mode only.
+    ``max_request_retries``: per-request restart budget — a step fault
+    or non-finite logit first retries the request recompute-style this
+    many times before quarantining it with ``finish_reason="error"``.
+    ``retry_reset_steps``: healthy engine steps after which a request's
+    restart budget resets (``RestartPolicy.reset_after_steps``);
+    0 = never resets.
     """
 
     max_new_tokens: int = 32
@@ -366,6 +378,9 @@ class ServeConfig:
     sched: str = "fcfs"               # fcfs | budget (SLA-aware)
     step_tokens: int = 0              # 0 = n_slots + prefill_chunk
     max_queue: int = 0                # 0 = unbounded admission queue
+    audit: int = 0                    # 0 = off, 1 = per-step, 2 = per-phase
+    max_request_retries: int = 1      # retries before quarantine
+    retry_reset_steps: int = 0        # healthy steps to reset the budget
 
     def __post_init__(self):
         if self.mode not in ("auto", "paged", "slots"):
@@ -382,6 +397,16 @@ class ServeConfig:
                 f"step_tokens must be >= 0, got {self.step_tokens}")
         if self.max_queue < 0:
             raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if self.audit not in (0, 1, 2):
+            raise ValueError(f"audit must be 0/1/2, got {self.audit}")
+        if self.max_request_retries < 0:
+            raise ValueError(
+                f"max_request_retries must be >= 0, "
+                f"got {self.max_request_retries}")
+        if self.retry_reset_steps < 0:
+            raise ValueError(
+                f"retry_reset_steps must be >= 0, "
+                f"got {self.retry_reset_steps}")
 
 
 @dataclass(frozen=True)

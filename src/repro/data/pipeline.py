@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from dataclasses import dataclass
 from typing import Dict, Iterator, Optional
 
@@ -62,6 +63,7 @@ class DataPipeline:
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
 
     # ------------------------------------------------------------- batches
     def _tokens_for_step(self, step: int) -> np.ndarray:
@@ -114,19 +116,41 @@ class DataPipeline:
     def start_prefetch(self):
         if self._thread is not None:
             return
+        self._exc = None
 
         def worker():
-            while not self._stop.is_set():
-                try:
-                    self._q.put(next(self), timeout=0.1)
-                except queue.Full:
-                    continue
+            try:
+                while not self._stop.is_set():
+                    # generate exactly once, then retry the *same* batch
+                    # while the queue is full — putting next(self) inside
+                    # the retry would advance the step counter and drop
+                    # the batch on every Full, silently skipping data
+                    b = next(self)
+                    while not self._stop.is_set():
+                        try:
+                            self._q.put(b, timeout=0.1)
+                            break
+                        except queue.Full:
+                            continue
+            except BaseException as e:  # surfaces via get_prefetched
+                self._exc = e
 
         self._thread = threading.Thread(target=worker, daemon=True)
         self._thread.start()
 
     def get_prefetched(self, timeout: float = 10.0):
-        return self._q.get(timeout=timeout)
+        """Next prefetched batch; re-raises anything the worker died on
+        (a dead worker would otherwise present as an eternal Empty)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._exc is not None:
+                    raise RuntimeError(
+                        "prefetch worker failed") from self._exc
+                if time.monotonic() >= deadline:
+                    raise
 
     def stop(self):
         self._stop.set()

@@ -1,10 +1,13 @@
 from repro.ft.failures import FailureInjector, RestartPolicy
+from repro.ft.chaos import ChaosInjector, SimulatedStepFailure
 from repro.ft.elastic import ElasticMeshManager
 from repro.ft.straggler import StragglerMonitor
 
 __all__ = [
     "FailureInjector",
     "RestartPolicy",
+    "ChaosInjector",
+    "SimulatedStepFailure",
     "ElasticMeshManager",
     "StragglerMonitor",
 ]

@@ -40,16 +40,29 @@ class FailureInjector:
 
 @dataclass
 class RestartPolicy:
-    """Bounded-retry restart with exponential backoff (capped)."""
+    """Bounded-retry restart with exponential backoff (capped).
+
+    ``reset_after_steps`` makes the budget recover: if that many steps
+    pass between failures, the restart counter resets to zero before
+    the new failure is counted.  Without it a long-lived process (a
+    serve engine handling weeks of traffic) would exhaust the budget
+    from faults that are hours apart — the budget should bound failure
+    *density*, not lifetime total.  0 disables the reset (the training
+    loop's original accumulate-forever behavior).
+    """
 
     max_restarts: int = 5
     backoff_s: float = 0.01
     backoff_cap_s: float = 1.0
+    reset_after_steps: int = 0
     restarts: int = 0
     last_failure_step: int = -1
 
     def on_failure(self, exc: Exception, step: int) -> float:
         """Returns backoff seconds before restart; raises if budget spent."""
+        if (self.reset_after_steps > 0 and self.last_failure_step >= 0
+                and step - self.last_failure_step >= self.reset_after_steps):
+            self.restarts = 0
         self.restarts += 1
         self.last_failure_step = step
         if self.restarts > self.max_restarts:

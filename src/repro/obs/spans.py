@@ -44,8 +44,12 @@ PREEMPTED = "preempted"
 RETIRED = "retired"
 CANCELLED = "cancelled"
 TIMED_OUT = "timed_out"
+# quarantined after a step fault / non-finite logits exhausted the
+# request's retry budget (finish_reason="error"); like PREEMPTED, a
+# *retried* fault is not terminal — the request loops back to QUEUED
+ERRORED = "errored"
 
-TERMINAL = (RETIRED, CANCELLED, TIMED_OUT)
+TERMINAL = (RETIRED, CANCELLED, TIMED_OUT, ERRORED)
 
 
 class RequestTimeline:

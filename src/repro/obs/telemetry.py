@@ -238,6 +238,64 @@ class Telemetry:
             self.tracer.instant(SCHED_TID, "cancel",
                                 args={"rid": rid, "reason": reason})
 
+    # --------------------------------------------------- faults / robustness
+    def on_fault(self, rid: int, kind: str) -> None:
+        """A per-request fault was detected (``kind``: ``step_fault`` /
+        ``nan_logits``) — before the retry-vs-quarantine decision."""
+        self.registry.counter("serve_faults_total", kind=kind).inc()
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "fault",
+                                args={"rid": rid, "kind": kind})
+
+    def on_retry(self, rid: int, kind: str, attempt: int) -> None:
+        """A faulted request was requeued for a recompute-style retry."""
+        t = self.clock()
+        self.registry.counter("serve_retries_total", kind=kind).inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            # like preemption, a retry loops the request back to QUEUED
+            tl.transition(spans.PREEMPTED, t)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "retry",
+                                args={"rid": rid, "kind": kind,
+                                      "attempt": attempt})
+
+    def on_quarantine(self, rid: int, kind: str, n_out: int) -> None:
+        """A request exhausted its retry budget and was quarantined
+        (``finish_reason="error"``)."""
+        t = self.clock()
+        self.registry.counter("serve_requests_quarantined_total",
+                              kind=kind).inc()
+        tl = self._timeline(rid)
+        if tl is not None:
+            tl.transition(spans.ERRORED, t)
+            self._finish(rid)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "quarantine",
+                                args={"rid": rid, "kind": kind,
+                                      "tokens": n_out})
+
+    def on_audit(self, level: int, ok: bool) -> None:
+        """One invariant audit pass completed (``ok=False`` means it
+        raised — counted before the AuditError propagates)."""
+        self.registry.counter("serve_audits_total").inc()
+        if not ok:
+            self.registry.counter("serve_audit_failures_total").inc()
+
+    def on_chaos(self, site: str) -> None:
+        """The chaos injector fired a fault at ``site``."""
+        self.registry.counter("serve_chaos_injected_total", site=site).inc()
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "chaos", args={"site": site})
+
+    def on_frontend_shed(self, reason: str) -> None:
+        """The streaming front-end shed a submission (by reason)."""
+        self.registry.counter("frontend_shed_total", reason=reason).inc()
+
+    def on_frontend_timeout(self) -> None:
+        """The front-end's deadline sweep timed out a live stream."""
+        self.registry.counter("frontend_timeouts_total").inc()
+
     # -------------------------------------------------- prefix cache / pages
     def on_cache_hit(self, rid: int, tokens: int, cow: bool) -> None:
         self.registry.counter("prefix_cache_hits_total").inc()
@@ -358,6 +416,27 @@ class NullTelemetry:
         pass
 
     def on_cancel(self, rid, reason):
+        pass
+
+    def on_fault(self, rid, kind):
+        pass
+
+    def on_retry(self, rid, kind, attempt):
+        pass
+
+    def on_quarantine(self, rid, kind, n_out):
+        pass
+
+    def on_audit(self, level, ok):
+        pass
+
+    def on_chaos(self, site):
+        pass
+
+    def on_frontend_shed(self, reason):
+        pass
+
+    def on_frontend_timeout(self):
         pass
 
     def on_cache_hit(self, rid, tokens, cow):

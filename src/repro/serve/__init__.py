@@ -10,6 +10,7 @@ paged-cache building blocks (see ``docs/serving.md``).
 from repro.serve.engine import AdmissionRejected, Request, ServeEngine
 from repro.serve.frontend import ServeFrontend, TokenStream
 from repro.serve.pages import (
+    AuditError,
     KVPages,
     PageAllocator,
     fork_tail_page,
@@ -26,6 +27,7 @@ from repro.serve.scheduler import (
 
 __all__ = [
     "AdmissionRejected",
+    "AuditError",
     "BudgetScheduler",
     "KVPages",
     "PRIORITY_WEIGHTS",

@@ -45,6 +45,7 @@ from repro.dist.sharding import (
     pool_pages_for_mesh,
 )
 from repro.engine import resolve_attn_backend, resolve_plan
+from repro.ft.failures import RestartPolicy
 from repro.models import (
     decode_step,
     decode_step_paged,
@@ -53,7 +54,10 @@ from repro.models import (
 )
 from repro.models import prefill_chunk as _prefill_chunk_fn
 from repro.serve.pages import (
+    NULL_PAGE,
     PAGED_FAMILIES,
+    AuditError,
+    KVPages,
     PageAllocator,
     fork_tail_page,
     init_kv_pages,
@@ -118,8 +122,10 @@ class Request:
     priority: str = "default"         # interactive | default | batch
     tenant: str = "default"           # fair-share accounting key part
     cancelled: bool = False           # terminal, but not successfully done
-    # "length" | "cancelled" | "timed_out" (None while running)
+    # "length" | "cancelled" | "timed_out" | "error" (None while running)
     finish_reason: Optional[str] = None
+    # recompute-style retries after step faults / non-finite logits
+    retries: int = 0
 
     # deprecated alias (pre-paged code set this attribute dynamically)
     @property
@@ -187,10 +193,16 @@ class ServeEngine:
         attn_backend: Optional[str] = None,
         clock=None,
         telemetry=None,
+        chaos=None,
     ):
         self.cfg = cfg
         self.scfg = scfg or ServeConfig()
         self.mesh = mesh
+        # ``chaos``: optional ft.ChaosInjector — deterministic fault
+        # injection at the engine's hook sites (page grants, step faults,
+        # NaN logits, preemption storms; see docs/robustness.md).  None
+        # (production) costs one attribute check per site.
+        self.chaos = chaos
         # ``clock``: injectable timebase for every engine timestamp
         # (``submit_t``, TTFT, telemetry spans) — defaults to the serve
         # clock (repro.obs.clock).  ``telemetry``: an explicit Telemetry /
@@ -277,10 +289,26 @@ class ServeEngine:
             logger.warning(
                 "ServeEngine: sched='budget' ignored in mode='slots' "
                 "(fixed-slot fallback runs FCFS)")
+        if self.scfg.audit and mode != "paged":
+            # the invariants audited (refcounts, free list, radix tree)
+            # are paged-pool state; slots mode has none of it
+            if not auto_fallback:
+                raise ValueError(
+                    "audit proves page-pool invariants; mode='slots' has "
+                    "no page pool to audit")
+            logger.warning(
+                "ServeEngine: audit ignored in mode='slots' "
+                "(no page pool)")
 
         self.queue: Deque[Request] = collections.deque()
         self._next_rid = 0
         self.shed_count = 0  # AdmissionRejected raises since construction
+        self.quarantined = 0  # requests finished with finish_reason="error"
+        self._engine_step = 0
+        # per-request restart budgets (rid -> RestartPolicy), created on
+        # first fault, dropped at terminal states
+        self._retry: Dict[int, RestartPolicy] = {}
+        self._errored_step: List[Request] = []
         self.obs.attach_engine(n_slots, mode)
 
         cfg_ = self.cfg
@@ -304,6 +332,7 @@ class ServeEngine:
                     self.pages, cache_shardings(mesh, self.pages))
             self.alloc = PageAllocator(n_pages, self.page_size, n_slots,
                                        max_len, obs=self.obs)
+            self.alloc.chaos = chaos  # page_grant fault site
             # the prefix cache attaches to the allocator (resident-page
             # ownership + LRU eviction when the free list runs dry)
             self.prefix_cache = None
@@ -391,6 +420,17 @@ class ServeEngine:
             # submit an explicit BOS token.
             raise ValueError(
                 "empty prompt: submit at least one token (e.g. BOS)")
+        if min(prompt) < 0 or max(prompt) >= self.cfg.vocab_size:
+            # out-of-vocab ids embed to an all-zero one-hot, whose norm
+            # divides by ~0 and decodes to non-finite logits — which the
+            # fault isolation would then quarantine after burning its
+            # retry budget.  Invalid input is a caller bug: reject it at
+            # the door instead of diagnosing it as a device fault.
+            bad = next(t for t in prompt
+                       if t < 0 or t >= self.cfg.vocab_size)
+            raise ValueError(
+                f"prompt token {bad} outside the model vocabulary "
+                f"[0, {self.cfg.vocab_size})")
         if len(prompt) > self.max_len - 2:
             raise ValueError(
                 f"prompt of {len(prompt)} tokens cannot fit max_len="
@@ -478,6 +518,7 @@ class ServeEngine:
             return False
         req.cancelled = True
         req.finish_reason = reason
+        self._retry.pop(req.rid, None)
         self.obs.on_cancel(req.rid, reason)
         if self.mode == "paged":
             for slot, r in enumerate(self.sched.slot_req):
@@ -549,6 +590,7 @@ class ServeEngine:
             "submitted": self._next_rid,
             "shed": self.shed_count,
             "preemptions": self.preemptions,
+            "quarantined": self.quarantined,
             "prefill_computed": self.prefill_computed,
         }
         if self.prefix_cache is not None:
@@ -557,20 +599,350 @@ class ServeEngine:
             out["obs"] = self.obs.snapshot()
         return out
 
+    # ==================================================== invariant audit
+    def audit(self) -> None:
+        """Prove the engine's host-side bookkeeping invariants; raises
+        :class:`~repro.serve.pages.AuditError` naming the first
+        violation.  Covers the allocator (refcount conservation, free
+        list, block tables), the prefix-cache radix tree, and the
+        scheduler (residency/queue consistency, pending forks).  Runs
+        automatically per step/phase under ``ServeConfig(audit=...)``;
+        callable directly from drills and tests.  Paged mode only."""
+        if self.mode != "paged":
+            raise ValueError("audit() proves page-pool invariants; "
+                             "mode='slots' has no page pool")
+        self.alloc.audit()
+        if self.prefix_cache is not None:
+            self.prefix_cache.audit()
+        self._audit_sched()
+
+    def _audit_sched(self) -> None:
+        """Scheduler-level invariants: a live request sits in exactly one
+        place (one lane, or the queue, never both/twice), no terminal
+        request holds a lane, and every pending COW fork's target is a
+        page its owner lane actually maps."""
+        def fail(msg: str) -> None:
+            raise AuditError(f"ServeEngine.audit: {msg}")
+
+        resident: Dict[int, int] = {}
+        for slot, req in enumerate(self.sched.slot_req):
+            if req is None:
+                if self.alloc._mapped[slot]:
+                    fail(f"empty lane {slot} still maps "
+                         f"{len(self.alloc._mapped[slot])} pages")
+                continue
+            if id(req) in resident:
+                fail(f"rid {req.rid} resident in two lanes")
+            resident[id(req)] = slot
+            if req.done or req.cancelled:
+                fail(f"terminal rid {req.rid} still resident in "
+                     f"lane {slot}")
+        seen_q = set()
+        for req in self.sched.queue:
+            if id(req) in resident:
+                fail(f"rid {req.rid} both queued and resident")
+            if id(req) in seen_q:
+                fail(f"rid {req.rid} queued twice")
+            seen_q.add(id(req))
+            if req.done or req.cancelled:
+                fail(f"terminal rid {req.rid} still queued")
+        for slot, _src, dst in self.sched.pending_forks:
+            req = self.sched.slot_req[slot]
+            if req is None:
+                fail(f"pending fork owned by empty lane {slot}")
+            if dst not in self.alloc._mapped[slot]:
+                fail(f"pending fork dst page {dst} not mapped by its "
+                     f"owner lane {slot}")
+
+    # ================================================= snapshot / restore
+    def snapshot(self) -> Dict:
+        """Crash-consistent snapshot of all serving state (paged mode).
+
+        Returns ``{"arrays": {name: np.ndarray}, "host": <JSON-able>}``
+        covering the device page pool, the sampling key, allocator
+        tables, the prefix-cache radix tree, scheduler queues (including
+        fair-share virtual time and pending COW forks), and every
+        in-flight request — everything :meth:`restore` needs to resume
+        token-identically.  Arrays are materialized to host numpy at
+        snapshot time, so later (donating) engine steps cannot mutate a
+        taken snapshot.  Terminal requests are the caller's state, not
+        the engine's, and are not captured; telemetry state restarts
+        fresh.  Persist with :meth:`save_snapshot`.
+        """
+        if self.mode != "paged":
+            raise ValueError("snapshot() covers the paged engine only")
+        arrays: Dict[str, np.ndarray] = {
+            "pages/k": np.asarray(self.pages.k),
+            "pages/v": np.asarray(self.pages.v),
+            "key": np.asarray(self.key),
+        }
+        if self.pages.quantized:
+            arrays["pages/k_scale"] = np.asarray(self.pages.k_scale)
+            arrays["pages/v_scale"] = np.asarray(self.pages.v_scale)
+
+        live: List[Request] = [r for r in self.sched.slot_req
+                               if r is not None]
+        live += [r for r in self.sched.queue if r not in live]
+        reqs = []
+        for r in live:
+            if r.last_logits is not None:
+                arrays[f"logits/{r.rid}"] = np.asarray(r.last_logits)
+            reqs.append({
+                "rid": r.rid,
+                "prompt": [int(t) for t in r.prompt],
+                "max_new_tokens": r.max_new_tokens,
+                "output": [int(t) for t in r.output],
+                "prefill_tokens": [int(t) for t in r.prefill_tokens],
+                "prefill_pos": r.prefill_pos,
+                "admit_seq": r.admit_seq,
+                "preemptions": r.preemptions,
+                "cached_tokens": r.cached_tokens,
+                "submit_t": r.submit_t,
+                "ttft": r.ttft,
+                "priority": r.priority,
+                "tenant": r.tenant,
+                "retries": r.retries,
+            })
+
+        sched: Dict = {
+            "queue": [r.rid for r in self.sched.queue],
+            "slots": [r.rid if r is not None else None
+                      for r in self.sched.slot_req],
+            "admit_seq": self.sched._admit_seq,
+            "preemptions": self.sched.preemptions,
+            "prefill_computed": self.sched.prefill_computed,
+            "pending_forks": [list(f) for f in self.sched.pending_forks],
+        }
+        if isinstance(self.sched, BudgetScheduler):
+            sched["vtime"] = [[t, p, vt] for (t, p), vt
+                              in self.sched._vtime.items()]
+
+        host: Dict = {
+            "geometry": {
+                "family": self.cfg.family,
+                "n_slots": self.n_slots,
+                "max_len": self.max_len,
+                "page_size": self.page_size,
+                "n_pages": self.alloc.n_pages,
+                "prefill_chunk": self.prefill_chunk,
+                "kv_bits": self.kv_bits,
+                "sched": type(self.sched).__name__,
+                "prefix_cache": self.prefix_cache is not None,
+            },
+            "engine": {
+                "next_rid": self._next_rid,
+                "shed_count": self.shed_count,
+                "quarantined": self.quarantined,
+                "engine_step": self._engine_step,
+            },
+            "alloc": {
+                "free": [int(p) for p in self.alloc.free],
+                "pos": [int(x) for x in self.alloc.pos],
+                "mapped": [[int(p) for p in m]
+                           for m in self.alloc._mapped],
+            },
+            "requests": reqs,
+            "sched": sched,
+            "retry": {str(rid): [pol.restarts, pol.last_failure_step]
+                      for rid, pol in self._retry.items()},
+        }
+        if self.prefix_cache is not None:
+            host["cache"] = self.prefix_cache.snapshot_state()
+        return {"arrays": arrays, "host": host}
+
+    def restore(self, snap: Dict) -> None:
+        """Load a :meth:`snapshot` into this (same-configuration) engine.
+
+        The engine must have been constructed with the same geometry —
+        family, slots, lengths, page pool, kv_bits, scheduler class and
+        prefix-cache setting (validated; mesh placement may differ: the
+        pool is re-placed under this engine's shardings).  After restore,
+        stepping resumes exactly where the snapshot was taken: the
+        recovery drill pins greedy outputs token-identical to the
+        uninterrupted run.
+        """
+        if self.mode != "paged":
+            raise ValueError("restore() covers the paged engine only")
+        host = snap["host"]
+        geom = host["geometry"]
+        mine = {
+            "family": self.cfg.family,
+            "n_slots": self.n_slots,
+            "max_len": self.max_len,
+            "page_size": self.page_size,
+            "n_pages": self.alloc.n_pages,
+            "prefill_chunk": self.prefill_chunk,
+            "kv_bits": self.kv_bits,
+            "sched": type(self.sched).__name__,
+            "prefix_cache": self.prefix_cache is not None,
+        }
+        diff = {k: (geom.get(k), mine[k]) for k in mine
+                if geom.get(k) != mine[k]}
+        if diff:
+            raise ValueError(
+                f"snapshot geometry does not match this engine: {diff}")
+
+        arrays = snap["arrays"]
+        pages = KVPages(
+            np.asarray(arrays["pages/k"]), np.asarray(arrays["pages/v"]),
+            (np.asarray(arrays["pages/k_scale"])
+             if "pages/k_scale" in arrays else None),
+            (np.asarray(arrays["pages/v_scale"])
+             if "pages/v_scale" in arrays else None),
+            self.page_size, self.kv_bits)
+        if self.mesh is not None:
+            self.pages = jax.device_put(
+                pages, cache_shardings(self.mesh, pages))
+        else:
+            self.pages = jax.tree_util.tree_map(jnp.asarray, pages)
+        self.key = jnp.asarray(np.asarray(arrays["key"]))
+
+        # allocator first: the cache's blocked recount reads refcounts
+        alloc = host["alloc"]
+        self.alloc.free = [int(p) for p in alloc["free"]]
+        self.alloc._mapped = [[int(p) for p in m]
+                              for m in alloc["mapped"]]
+        self.alloc.pos[:] = alloc["pos"]
+        self.alloc.block_tables[:, :] = NULL_PAGE
+        self.alloc.refcount[:] = 0
+        for slot, mapped in enumerate(self.alloc._mapped):
+            for blk, page in enumerate(mapped):
+                self.alloc.block_tables[slot, blk] = page
+                self.alloc.refcount[page] += 1
+        if self.prefix_cache is not None:
+            self.prefix_cache.restore_state(host["cache"])
+
+        by_rid: Dict[int, Request] = {}
+        for r in host["requests"]:
+            req = Request(r["rid"], list(r["prompt"]),
+                          r["max_new_tokens"],
+                          priority=r["priority"], tenant=r["tenant"])
+            req.output = list(r["output"])
+            req.prefill_tokens = list(r["prefill_tokens"])
+            req.prefill_pos = r["prefill_pos"]
+            req.admit_seq = r["admit_seq"]
+            req.preemptions = r["preemptions"]
+            req.cached_tokens = r["cached_tokens"]
+            req.submit_t = r["submit_t"]
+            req.ttft = r["ttft"]
+            req.retries = r["retries"]
+            lg = arrays.get(f"logits/{req.rid}")
+            if lg is not None:
+                req.last_logits = np.asarray(lg)
+            by_rid[req.rid] = req
+
+        sched = host["sched"]
+        self.sched.queue = collections.deque(
+            by_rid[rid] for rid in sched["queue"])
+        self.sched.slot_req = [
+            by_rid[rid] if rid is not None else None
+            for rid in sched["slots"]]
+        self.sched._admit_seq = sched["admit_seq"]
+        self.sched.preemptions = sched["preemptions"]
+        self.sched.prefill_computed = sched["prefill_computed"]
+        self.sched.pending_forks = [
+            (int(s), int(src), int(dst))
+            for s, src, dst in sched["pending_forks"]]
+        if isinstance(self.sched, BudgetScheduler):
+            self.sched._vtime = {(t, p): vt
+                                 for t, p, vt in sched.get("vtime", [])}
+
+        eng = host["engine"]
+        self._next_rid = eng["next_rid"]
+        self.shed_count = eng["shed_count"]
+        self.quarantined = eng["quarantined"]
+        self._engine_step = eng["engine_step"]
+        self._retry = {}
+        for rid, (restarts, last_step) in host["retry"].items():
+            self._retry[int(rid)] = RestartPolicy(
+                max_restarts=self.scfg.max_request_retries,
+                backoff_s=0.0,
+                reset_after_steps=self.scfg.retry_reset_steps,
+                restarts=restarts, last_failure_step=last_step)
+
+    def save_snapshot(self, directory: str, step: int) -> str:
+        """Persist :meth:`snapshot` through ``repro.ckpt`` (manifest +
+        checksummed shards, atomic commit).  Returns the written path."""
+        from repro.ckpt import save_checkpoint
+
+        snap = self.snapshot()
+        specs = {name: [list(a.shape), str(a.dtype)]
+                 for name, a in snap["arrays"].items()}
+        return save_checkpoint(
+            directory, step, snap["arrays"],
+            extra={"kind": "serve-engine-snapshot",
+                   "host": snap["host"], "array_specs": specs})
+
+    def load_snapshot(self, directory: str,
+                      step: Optional[int] = None) -> int:
+        """Restore from a :meth:`save_snapshot` directory (``step=None``
+        loads the latest committed snapshot).  Returns the step loaded.
+
+        The array template ``repro.ckpt`` needs is rebuilt from the
+        manifest's ``array_specs`` — snapshots are self-describing, so
+        restore needs no record of which requests were in flight.
+        """
+        import json
+        import os
+
+        from repro.ckpt import load_checkpoint
+        from repro.ckpt.checkpoint import latest_step
+
+        if step is None:
+            step = latest_step(directory)
+            if step is None:
+                raise FileNotFoundError(
+                    f"no committed snapshot in {directory}")
+        final = os.path.join(directory, f"step_{step:08d}")
+        with open(os.path.join(final, "manifest_0.json")) as f:
+            extra = json.load(f)["extra"]
+        if extra.get("kind") != "serve-engine-snapshot":
+            raise ValueError(
+                f"{final} is not a serve-engine snapshot")
+        template = {name: np.zeros(shape, dtype=np.dtype(dt))
+                    for name, (shape, dt)
+                    in extra["array_specs"].items()}
+        arrays, _ = load_checkpoint(directory, template, step)
+        self.restore({"arrays": arrays, "host": extra["host"]})
+        return step
+
     # ================================================== paged internals
     def _step_paged(self) -> List[Request]:
+        self._engine_step += 1
         finished: List[Request] = []
+        self._errored_step = []  # quarantines land here (terminal too)
+        if self.chaos is not None and self.chaos.fire("preempt_storm"):
+            # mass eviction drill: recompute-style, token-preserving
+            self.obs.on_chaos("preempt_storm")
+            self.sched.preempt_storm()
         with self.obs.phase("admit"):
             self.sched.admit()
             self._apply_forks()
+        self._maybe_audit(2)
         with self.obs.phase("prefill"):
             self._prefill_once()
+        self._maybe_audit(2)
         # pre-decode retire: max_new_tokens=0 must emit no tokens
         finished.extend(self._retire_paged(limit_only=True))
         with self.obs.phase("decode"):
             self._decode_once_paged()
+        self._maybe_audit(2)
         finished.extend(self._retire_paged())
+        self._maybe_audit(1)
+        finished.extend(self._errored_step)
         return finished
+
+    def _maybe_audit(self, level: int) -> None:
+        """Run :meth:`audit` when ``ServeConfig.audit`` reaches
+        ``level`` (1 = post-step, 2 = also after each phase)."""
+        if self.scfg.audit < level:
+            return
+        try:
+            self.audit()
+        except AuditError:
+            self.obs.on_audit(self.scfg.audit, False)
+            raise
+        self.obs.on_audit(self.scfg.audit, True)
 
     def _apply_forks(self) -> None:
         """Run the device copies of pending copy-on-write forks (mid-page
@@ -599,12 +971,26 @@ class ServeEngine:
         self.obs.on_prefill(
             [(slot, self.sched.slot_req[slot].rid, n)
              for slot, n in lanes], t0)
+        fault_slot, lg = self._inject_lane_chaos(
+            [s for s, _ in lanes], lg)
         for slot, n_real in lanes:
             req = self.sched.slot_req[slot]
+            if slot == fault_slot:
+                # simulated device error on this lane's chunk: none of
+                # its bookkeeping advances — retry or quarantine
+                self._fault(slot, req, "step_fault")
+                continue
             req.prefill_pos += n_real
             self.alloc.pos[slot] += n_real
             if req.prefill_pos >= len(req.prefill_tokens):
-                req.last_logits = lg[slot, -1]
+                last = lg[slot, -1]
+                if not np.all(np.isfinite(last)):
+                    # non-finite logits must be caught *before* the
+                    # prefix-cache insert: poisoned KV pages must never
+                    # be published for other requests to share
+                    self._fault(slot, req, "nan_logits")
+                    continue
+                req.last_logits = last
                 if self.prefix_cache is not None:
                     # the prompt's full pages are write-frozen from here
                     # (decode appends at pos >= len(prefill_tokens)):
@@ -650,9 +1036,22 @@ class ServeEngine:
                 self.params, self.pages, bt, pos, active, tokens)
             lg = np.asarray(logits)  # host sync: the step has landed
         self.obs.on_decode([(s, r.rid) for s, r in ready], t0)
+        fault_slot, lg = self._inject_lane_chaos(
+            [s for s, _ in ready], lg)
         for slot, req in ready:
+            if slot == fault_slot:
+                self._fault(slot, req, "step_fault")
+                continue
+            last = lg[slot, -1]
+            if not np.all(np.isfinite(last)):
+                # the token appended above was sampled from *valid*
+                # logits and its KV write landed; the recompute retry
+                # replays it, so greedy output is unchanged — only the
+                # poisoned logits are discarded
+                self._fault(slot, req, "nan_logits")
+                continue
             self.alloc.pos[slot] += 1
-            req.last_logits = lg[slot, -1]
+            req.last_logits = last
 
     def _retire_paged(self, limit_only: bool = False) -> List[Request]:
         done = []
@@ -666,8 +1065,105 @@ class ServeEngine:
                 self.sched.drop_forks(slot)
                 self.alloc.free_slot(slot)
                 self.sched.slot_req[slot] = None
+                self._retry.pop(req.rid, None)
                 self.obs.on_retire(req.rid, "length", len(req.output))
         return done
+
+    # ============================================== faults / quarantine
+    def _inject_lane_chaos(self, slots: List[int], lg: np.ndarray):
+        """Consult the chaos injector after a dispatch landed: returns
+        ``(fault_slot, lg)`` where ``fault_slot`` (or None) takes a
+        simulated device error, and ``lg`` may have one lane's logits
+        overwritten with NaN (a copy — the injected poison then flows
+        through the same non-finite detection a real fault would)."""
+        if self.chaos is None or not slots:
+            return None, lg
+        fault_slot = None
+        if self.chaos.fire("step_fault"):
+            self.obs.on_chaos("step_fault")
+            fault_slot = slots[self.chaos.pick("step_fault", len(slots))]
+        if self.chaos.fire("nan_logits"):
+            self.obs.on_chaos("nan_logits")
+            victim = slots[self.chaos.pick("nan_logits", len(slots))]
+            lg = np.array(lg)  # np.asarray of a jax array may be read-only
+            lg[victim] = np.nan
+        return fault_slot, lg
+
+    def _scrub_slot_pages(self, slot: int) -> None:
+        """Zero a faulted lane's privately-owned pages before they return
+        to the free list.
+
+        A non-finite fault has written NaN into the lane's KV pages, and
+        the attention paths mask additively (``score + -inf``) — adding
+        ``-inf`` to a NaN score is still NaN, so a stale poisoned value
+        in the masked tail of a reused page contaminates the *next*
+        tenant's softmax.  Pages the prefix cache holds (or other lanes
+        share) are skipped: they were write-frozen by a clean prefill
+        before this request's fault and other requests still read them.
+        """
+        cached = (set(self.prefix_cache.pages())
+                  if self.prefix_cache is not None else set())
+        private = [p for p in self.alloc._mapped[slot]
+                   if self.alloc.refcount[p] == 1 and p not in cached]
+        if not private:
+            return
+        idx = jnp.asarray(private, jnp.int32)
+        kw = {"k": self.pages.k.at[:, idx].set(0),
+              "v": self.pages.v.at[:, idx].set(0)}
+        if self.pages.quantized:
+            kw["k_scale"] = self.pages.k_scale.at[:, idx].set(0)
+            kw["v_scale"] = self.pages.v_scale.at[:, idx].set(0)
+        self.pages = self.pages.replace(**kw)
+
+    def _fault(self, slot: int, req: Request, kind: str) -> None:
+        """One lane's step failed (simulated device error or non-finite
+        logits).  Isolation is per-request: within the restart budget the
+        request is requeued recompute-style (identical to preemption —
+        greedy output is token-preserved); past it, quarantined with
+        ``finish_reason="error"``.  Every other lane is untouched.
+        """
+        self.obs.on_fault(req.rid, kind)
+        pol = self._retry.get(req.rid)
+        if pol is None:
+            pol = self._retry[req.rid] = RestartPolicy(
+                max_restarts=self.scfg.max_request_retries,
+                backoff_s=0.0,
+                reset_after_steps=self.scfg.retry_reset_steps)
+        try:
+            pol.on_failure(RuntimeError(kind), self._engine_step)
+        except RuntimeError:
+            self._quarantine(slot, req, kind)
+            return
+        # recompute-style retry: exactly the preemption path — pages
+        # scrubbed and released, generated tokens become prefill, front
+        # of the queue
+        self._scrub_slot_pages(slot)
+        self.sched.drop_forks(slot)
+        self.alloc.free_slot(slot)
+        self.sched.slot_req[slot] = None
+        req.prefill_tokens = list(req.prompt) + list(req.output)
+        req.prefill_pos = 0
+        req.cached_tokens = 0
+        req.last_logits = None
+        req.retries += 1
+        self.sched.queue.appendleft(req)
+        self.obs.on_retry(req.rid, kind, pol.restarts)
+
+    def _quarantine(self, slot: int, req: Request, kind: str) -> None:
+        """Remove a request whose restart budget is spent: pages and
+        prefix-cache pins release, pending forks drop, and the request
+        terminates with ``finish_reason="error"`` — tokens generated so
+        far stay on ``req.output`` for the caller."""
+        req.cancelled = True
+        req.finish_reason = "error"
+        self._scrub_slot_pages(slot)
+        self.sched.drop_forks(slot)
+        self.alloc.free_slot(slot)
+        self.sched.slot_req[slot] = None
+        self._retry.pop(req.rid, None)
+        self.quarantined += 1
+        self._errored_step.append(req)  # step() returns terminals
+        self.obs.on_quarantine(req.rid, kind, len(req.output))
 
     # ================================================== slots internals
     def _step_slots(self) -> List[Request]:

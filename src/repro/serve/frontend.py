@@ -32,6 +32,7 @@ Stream lifecycle (also in ``docs/serving.md``)::
     queued -> prefilling -> decoding -> done
        |           |           |     -> cancelled  (TokenStream.cancel)
        |           +-----------+---- -> timed_out  (deadline_s elapsed)
+       |           +-----------+---- -> error      (engine quarantine)
        +---------------------------- -> shed       (admission refused)
 
 The front-end is synchronous-cooperative, not threaded: ``step()`` runs
@@ -55,12 +56,15 @@ DONE = "done"
 CANCELLED = "cancelled"
 TIMED_OUT = "timed_out"
 SHED = "shed"
+# quarantined by the engine after a step fault / non-finite logits
+# exhausted its retry budget (finish_reason="error")
+ERROR = "error"
 # live stream states (mirror ServeEngine.request_phase)
 QUEUED = "queued"
 PREFILLING = "prefilling"
 DECODING = "decoding"
 
-TERMINAL_STATES = (DONE, CANCELLED, TIMED_OUT, SHED)
+TERMINAL_STATES = (DONE, CANCELLED, TIMED_OUT, SHED, ERROR)
 
 
 class TokenStream:
@@ -171,6 +175,7 @@ class ServeFrontend:
                                      priority=priority, tenant=tenant)
         except AdmissionRejected as e:
             self.shed_count += 1
+            self.engine.obs.on_frontend_shed(e.reason)
             stream = TokenStream(self, None, now, deadline_s,
                                  shed_reason=e.reason)
             self.streams.append(stream)
@@ -197,11 +202,28 @@ class ServeFrontend:
         """Expire deadlines, run one engine step, pump new tokens into
         their streams.  Returns True while any live stream remains."""
         now = self._clock()
+        chaos = getattr(self.engine, "chaos", None)
+        if chaos is not None and self._live:
+            if chaos.fire("cancel"):
+                self.engine.obs.on_chaos("cancel")
+                victim = self._live[chaos.pick("cancel", len(self._live))]
+                self.cancel(victim)
+            if chaos.fire("deadline_skew"):
+                # the sweep below sees a skewed clock: deadlines near the
+                # boundary trip early, exercising the cancel-on-deadline
+                # path against requests mid-prefill/decode
+                self.engine.obs.on_chaos("deadline_skew")
+                now = now + chaos.skew_s
         for stream in list(self._live):
             if (stream.deadline_s is not None
                     and now - stream.arrival_t >= stream.deadline_s):
-                self.timeout_count += 1
-                self.engine.cancel(stream.req, "timed_out")
+                # cancel() is False if the engine already retired or
+                # quarantined the request this step — without the guard a
+                # request could be counted timed-out *and* keep its real
+                # terminal state, double-counting the sweep
+                if self.engine.cancel(stream.req, "timed_out"):
+                    self.timeout_count += 1
+                    self.engine.obs.on_frontend_timeout()
         if self.engine.has_work():
             self.engine.step()
         self._pump()
@@ -229,8 +251,12 @@ class ServeFrontend:
                 stream.state = DONE
                 stream.finish_t = now
             elif req.cancelled:
-                stream.state = (TIMED_OUT if req.finish_reason == "timed_out"
-                                else CANCELLED)
+                if req.finish_reason == "timed_out":
+                    stream.state = TIMED_OUT
+                elif req.finish_reason == "error":
+                    stream.state = ERROR
+                else:
+                    stream.state = CANCELLED
                 stream.finish_t = now
             else:
                 stream.state = self.engine.request_phase(req)

@@ -57,6 +57,17 @@ from repro.obs.telemetry import NULL_TELEMETRY
 
 NULL_PAGE = 0  # physical page 0 is never allocated; garbage writes land here
 
+
+class AuditError(AssertionError):
+    """A runtime invariant audit failed (allocator or prefix cache).
+
+    Subclasses ``AssertionError`` so test harnesses that assert on
+    engine state treat an audit trip as a failed assertion, but keeps
+    its own type so production callers can catch *audit* failures
+    (state corruption — stop taking traffic) apart from ordinary
+    assertion bugs.
+    """
+
 # families whose KV state is pageable (ssm/hybrid keep O(1) recurrent
 # state and stay on the fixed-slot engine); the single source of truth
 # for both init_kv_pages and ServeEngine's mode="auto" selection
@@ -189,6 +200,7 @@ class PageAllocator:
         self._mapped: List[List[int]] = [[] for _ in range(n_slots)]
         self.refcount = np.zeros((n_pages,), np.int32)
         self._cache = None  # attached PrefixCache (eviction provider)
+        self.chaos = None   # optional ft.ChaosInjector (page_grant site)
 
     # -------------------------------------------------------- prefix cache
     def attach_cache(self, cache) -> None:
@@ -239,7 +251,15 @@ class PageAllocator:
 
     # --------------------------------------------------------- allocation
     def _take_page(self) -> Optional[int]:
-        """Pop a free page, evicting cached refcount-0 pages if needed."""
+        """Pop a free page, evicting cached refcount-0 pages if needed.
+
+        The chaos hook fires *before* the pop: a fired ``page_grant``
+        fault makes this grant fail exactly as a dry pool would, so
+        every caller exercises its real out-of-capacity path (admission
+        blocks, decode preempts, COW forks drop) on demand.
+        """
+        if self.chaos is not None and self.chaos.fire("page_grant"):
+            return None
         if not self.free and self._cache is not None:
             self._cache.evict(1)
         if not self.free:
@@ -283,8 +303,14 @@ class PageAllocator:
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s block table to cover ``n_tokens`` logical tokens.
-        Returns False (allocating nothing) if the free list runs dry even
-        after evicting cached pages."""
+        Returns False (net allocating nothing) if the free list runs dry
+        even after evicting cached pages.
+
+        ``can_allocate`` pre-checks capacity, but a grant can still fail
+        mid-loop (chaos at the ``page_grant`` site, or a racing evictable
+        count); a partial grant is rolled back page-by-page so a False
+        return always leaves the slot exactly as it was.
+        """
         need = pages_for(n_tokens, self.page_size)
         if need > self.max_blocks:
             raise ValueError(
@@ -294,9 +320,18 @@ class PageAllocator:
             return True  # nothing to grant (the per-decode-token case)
         if not self.can_allocate(need - have):
             return False
+        granted: List[int] = []
         for blk in range(have, need):
             page = self._take_page()
-            assert page is not None, "can_allocate granted but pool is dry"
+            if page is None:
+                for g in reversed(granted):
+                    blk_g = len(self._mapped[slot]) - 1
+                    self._mapped[slot].pop()
+                    self.block_tables[slot, blk_g] = NULL_PAGE
+                    self._release_page(g)
+                self._emit_pages()
+                return False
+            granted.append(page)
             self.refcount[page] = 1
             self._mapped[slot].append(page)
             self.block_tables[slot, blk] = page
@@ -341,6 +376,104 @@ class PageAllocator:
     def block_row(self, slot: int) -> np.ndarray:
         """The slot's block-table row (a copy — safe to hand to the tree)."""
         return self.block_tables[slot].copy()
+
+    # -------------------------------------------------------------- audit
+    def audit(self) -> None:
+        """Prove the allocator's bookkeeping invariants; raise
+        :class:`AuditError` naming the first violation.
+
+        Checked (the refcount contract the prefix cache and schedulers
+        build on):
+
+        * the null page is never allocated, freed, or referenced;
+        * the free list holds unique, in-range, refcount-0 pages,
+          disjoint from every mapped page and every cache-resident page;
+        * **refcount conservation** — ``refcount[p]`` equals the number
+          of block-table references across all lanes (cache residency
+          deliberately takes no refcount: a cached page is *defined* by
+          refcount 0 + ``cache.holds``);
+        * each block-table row is exactly its ``_mapped`` list followed
+          by ``NULL_PAGE`` padding — the jitted steps only ever address
+          live pages;
+        * ``pos`` never exceeds the slot's mapped token capacity;
+        * **page conservation** — every physical page is free, mapped,
+          or cache-resident; nothing leaks.
+        """
+        def fail(msg: str) -> None:
+            raise AuditError(f"PageAllocator.audit: {msg}")
+
+        if self.refcount[NULL_PAGE] != 0:
+            fail(f"null page has refcount {self.refcount[NULL_PAGE]}")
+
+        # vectorized checks on the hot path; when one trips, the slow
+        # per-element sweep below names the exact violation.  The audit
+        # runs after every step under ServeConfig(audit=1), so its cost
+        # is part of the serving budget (BENCH_chaos.json gates it).
+        free_set = set(self.free)
+        if len(free_set) != len(self.free):
+            fail("free list holds duplicate pages")
+        if self.free:
+            f = np.asarray(self.free, dtype=np.int64)
+            if f.min() <= NULL_PAGE or f.max() >= self.n_pages:
+                p = int(f[(f <= NULL_PAGE) | (f >= self.n_pages)][0])
+                fail(f"free list holds out-of-range page {p}")
+            ref_f = self.refcount[f]
+            if ref_f.any():
+                p = int(f[np.nonzero(ref_f)[0][0]])
+                fail(f"free page {p} has refcount {self.refcount[p]}")
+        if self._cache is not None:
+            both = free_set & set(self._cache.pages())
+            if both:
+                fail(f"page {min(both)} is both free and cache-resident")
+
+        # refcount conservation: count block-table references per page
+        flat: List[int] = []
+        mapped_set = set()
+        for slot in range(self.n_slots):
+            mapped = self._mapped[slot]
+            row = self.block_tables[slot]
+            n = len(mapped)
+            if n:
+                ok = (min(mapped) > NULL_PAGE
+                      and max(mapped) < self.n_pages
+                      and row[:n].tolist() == mapped)
+                if not ok:
+                    for blk, page in enumerate(mapped):  # name it
+                        if not (NULL_PAGE < page < self.n_pages):
+                            fail(f"slot {slot} maps out-of-range "
+                                 f"page {page}")
+                        if row[blk] != page:
+                            fail(f"slot {slot} block {blk}: table says "
+                                 f"{row[blk]}, _mapped says {page}")
+                flat.extend(mapped)
+                mapped_set.update(mapped)
+            if row[n:].any():  # NULL_PAGE == 0: padding must be all-zero
+                fail(f"slot {slot} block table addresses pages past its "
+                     f"{n} mapped blocks")
+            cap = n * self.page_size
+            if not (0 <= self.pos[slot] <= cap):
+                fail(f"slot {slot} pos {self.pos[slot]} outside mapped "
+                     f"capacity {cap}")
+        expect = (np.bincount(np.asarray(flat, dtype=np.int64),
+                              minlength=self.n_pages)
+                  if flat else np.zeros((self.n_pages,), np.int64))
+        bad = np.nonzero(expect != self.refcount)[0]
+        if bad.size:
+            p = int(bad[0])
+            fail(f"page {p} refcount {self.refcount[p]} != "
+                 f"{int(expect[p])} block-table references")
+        if free_set & mapped_set:
+            p = min(free_set & mapped_set)
+            fail(f"page {p} is both free and mapped")
+
+        # page conservation: free + mapped + cache-resident covers the pool
+        accounted = free_set | mapped_set
+        if self._cache is not None:
+            accounted |= set(self._cache.pages())
+        leaked = set(range(1, self.n_pages)) - accounted
+        if leaked:
+            fail(f"pages leaked (not free, mapped, or cached): "
+                 f"{sorted(leaked)[:8]}")
 
     # -------------------------------------------------------------- views
     def device_tables(self, shardings=None

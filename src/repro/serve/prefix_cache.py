@@ -147,6 +147,11 @@ class PrefixCache:
         """Is this physical page resident in the tree?"""
         return page in self._by_page
 
+    def pages(self):
+        """All resident physical page ids (the allocator's audit uses
+        this for page-conservation accounting)."""
+        return self._by_page.keys()
+
     @property
     def cached_pages(self) -> int:
         return len(self._by_page)
@@ -367,6 +372,171 @@ class PrefixCache:
         if evicted:
             self.obs.on_cache_evict(evicted)
         return evicted
+
+    # --------------------------------------------------- snapshot / restore
+    def snapshot_state(self) -> Dict:
+        """JSON-able tree state for ``ServeEngine.snapshot()``.
+
+        Nodes are listed in DFS preorder (every parent precedes its
+        children) keyed by page id — page ids are unique tree positions,
+        so ``parent`` page 0 (the null page, the root's id) means the
+        root.  The incremental eviction state (``_blocked``,
+        ``blocked_children``, the LRU heap) is *not* serialized: it is
+        derived state, recomputed from refcounts at restore.
+        """
+        nodes: List[Dict] = []
+        stack: List[_Node] = [self.root]
+        while stack:
+            node = stack.pop()
+            if node is not self.root:
+                nodes.append({
+                    "page": int(node.page),
+                    "key": [int(t) for t in node.key],
+                    "parent": (int(node.parent.page)
+                               if node.parent is not self.root else 0),
+                    "last_used": int(node.last_used),
+                })
+            stack.extend(node.children.values())
+        return {
+            "nodes": nodes,
+            "clock": self._clock,
+            "hits": self.hits,
+            "misses": self.misses,
+            "hit_tokens": self.hit_tokens,
+            "cow_forks": self.cow_forks,
+            "inserted_pages": self.inserted_pages,
+            "evicted_pages": self.evicted_pages,
+        }
+
+    def restore_state(self, state: Dict) -> None:
+        """Rebuild the tree from :meth:`snapshot_state`.
+
+        The allocator's refcounts must already be restored: the blocked
+        counters are recomputed bottom-up from them.  Every node is
+        pushed onto the LRU heap — an over-approximation the heap's
+        pop-time validation is already built to discard (interior or
+        pinned entries are skipped; stale ages re-queue).
+        """
+        self.root = _Node(None, None, NULL_PAGE)
+        self._by_page = {}
+        for n in state["nodes"]:  # preorder: parents already rebuilt
+            parent = (self.root if n["parent"] == 0
+                      else self._by_page[n["parent"]])
+            key = tuple(n["key"])
+            node = _Node(parent, key, n["page"])
+            node.last_used = n["last_used"]
+            parent.children[key] = node
+            self._by_page[n["page"]] = node
+        # recompute blocked state bottom-up (post-order = reversed preorder)
+        ref = self.alloc.refcount
+        order: List[_Node] = []
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            order.append(node)
+            stack.extend(node.children.values())
+        blocked: Dict[int, bool] = {}
+        self._blocked = 0
+        for node in reversed(order):
+            node.blocked_children = sum(
+                1 for c in node.children.values() if blocked[id(c)])
+            if node is self.root:
+                continue
+            b = node.blocked_children > 0 or ref[node.page] > 0
+            blocked[id(node)] = b
+            self._blocked += b
+        self._lru = [(node.last_used, page)
+                     for page, node in self._by_page.items()]
+        heapq.heapify(self._lru)
+        self._clock = state["clock"]
+        self.hits = state["hits"]
+        self.misses = state["misses"]
+        self.hit_tokens = state["hit_tokens"]
+        self.cow_forks = state["cow_forks"]
+        self.inserted_pages = state["inserted_pages"]
+        self.evicted_pages = state["evicted_pages"]
+
+    # -------------------------------------------------------------- audit
+    def audit(self) -> None:
+        """Prove the tree's structural and counter invariants; raise
+        :class:`~repro.serve.pages.AuditError` naming the first violation.
+
+        Checked:
+
+        * tree structure — parent/child links agree, dict keys match node
+          keys, no node owns the null page, ``_by_page`` is exactly the
+          set of reachable nodes (no orphans, no strays);
+        * the incremental eviction state — every node's
+          ``blocked_children`` equals a fresh recount, ``_blocked``
+          equals the number of blocked nodes, and the O(1)
+          ``evictable_count()`` equals the post-order
+          :meth:`_recount_evictable` oracle;
+        * evictability liveness — every currently-evictable leaf has an
+          entry on the lazy LRU heap (lazy deletion may leave *extra*
+          entries, never missing ones — a missing entry is a page that
+          could never be reclaimed).
+        """
+        from repro.serve.pages import AuditError
+
+        def fail(msg: str) -> None:
+            raise AuditError(f"PrefixCache.audit: {msg}")
+
+        ref = self.alloc.refcount
+        reachable: Dict[int, _Node] = {}
+        stack: List[_Node] = [self.root]
+        order: List[_Node] = []  # pre-order; reversed = post-order
+        while stack:
+            node = stack.pop()
+            order.append(node)
+            for key, child in node.children.items():
+                if child.parent is not node:
+                    fail(f"page {child.page}: parent link does not match "
+                         "its position in the tree")
+                if child.key != key:
+                    fail(f"page {child.page}: node key {child.key} != dict "
+                         f"key {key}")
+                if child.page == NULL_PAGE:
+                    fail("a tree node owns the null page")
+                if child.page in reachable:
+                    fail(f"page {child.page} appears at two tree positions")
+                reachable[child.page] = child
+                stack.append(child)
+        if set(reachable) != set(self._by_page):
+            orphans = set(self._by_page) - set(reachable)
+            strays = set(reachable) - set(self._by_page)
+            fail(f"_by_page does not match the reachable tree "
+                 f"(orphans={sorted(orphans)[:8]}, "
+                 f"strays={sorted(strays)[:8]})")
+        for page, node in reachable.items():
+            if self._by_page[page] is not node:
+                fail(f"_by_page[{page}] points at a different node")
+
+        # post-order recount of the incremental blocked state
+        blocked: Dict[int, bool] = {}
+        n_blocked = 0
+        for node in reversed(order):
+            count = sum(1 for c in node.children.values()
+                        if blocked[id(c)])
+            if node.blocked_children != count:
+                fail(f"page {node.page}: blocked_children "
+                     f"{node.blocked_children} != recount {count}")
+            if node is self.root:
+                continue
+            is_blocked = count > 0 or ref[node.page] > 0
+            blocked[id(node)] = is_blocked
+            n_blocked += is_blocked
+        if self._blocked != n_blocked:
+            fail(f"_blocked {self._blocked} != recount {n_blocked}")
+        if self.evictable_count() != self._recount_evictable():
+            fail(f"evictable_count() {self.evictable_count()} != "
+                 f"post-order recount {self._recount_evictable()}")
+
+        # every evictable leaf must be reclaimable through the heap
+        heap_pages = {page for _, page in self._lru}
+        for page, node in self._by_page.items():
+            if (not node.children and ref[page] == 0
+                    and page not in heap_pages):
+                fail(f"evictable leaf page {page} has no LRU heap entry")
 
     # ------------------------------------------------------------- reports
     def stats(self) -> Dict[str, int]:

@@ -166,12 +166,31 @@ class PagedScheduler:
             if n_shared:
                 self.alloc.free_slot(slot)  # unpin; pages stay cached
             return False
+        # the COW fork target is granted first: a failed grant (pool dry
+        # after all, or chaos at the page_grant site) downgrades the
+        # mid-page match — the partial tokens simply prefill normally —
+        # rather than failing the whole admission
+        fork = None
+        if match is not None and match.partial is not None:
+            dst = self.alloc.alloc_page(slot)
+            if dst is None:
+                match.partial = None
+                match.matched_tokens = n_shared * self.alloc.page_size
+            else:
+                fork = (slot, match.partial[0], dst)
+        matched = match.matched_tokens if match is not None else 0
+        self.alloc.pos[slot] = matched
+        if not self.alloc.ensure(slot, len(toks) + 1):
+            # capacity said yes but the grant still failed mid-loop
+            # (chaos-injected, or an evictable page vanished): roll the
+            # whole admission back — shared pins and the fork target all
+            # release through free_slot, the request stays queued
+            self.alloc.free_slot(slot)
+            return False
         self.slot_req[slot] = req
         req.admit_seq = self._admit_seq
         self._admit_seq += 1
-        matched = 0
         if match is not None:
-            matched = match.matched_tokens
             self.prefix_cache.hits += bool(matched)
             self.prefix_cache.misses += not matched
             self.prefix_cache.hit_tokens += matched
@@ -180,17 +199,11 @@ class PagedScheduler:
                                       match.partial is not None)
             else:
                 self.obs.on_cache_miss(req.rid)
-            if match.partial is not None:
-                dst = self.alloc.alloc_page(slot)
-                assert dst is not None, \
-                    "can_allocate granted but fork allocation failed"
-                self.pending_forks.append((slot, match.partial[0], dst))
+            if fork is not None:
+                self.pending_forks.append(fork)
                 self.prefix_cache.cow_forks += 1
         req.prefill_pos = matched
         req.cached_tokens = matched
-        self.alloc.pos[slot] = matched
-        ok = self.alloc.ensure(slot, len(toks) + 1)
-        assert ok, "can_allocate granted but ensure failed"
         self.obs.on_admit(req.rid, slot, matched)
         return True
 
@@ -306,6 +319,20 @@ class PagedScheduler:
         self.preemptions += 1
         self.drop_forks(slot)
         self.queue.appendleft(req)
+
+    def preempt_storm(self) -> int:
+        """Preempt **every** resident request (the chaos injector's
+        ``preempt_storm`` site — a mass-eviction drill).  Recompute-style
+        preemption is token-preserving, so a storm costs latency and
+        prefill compute but can never change greedy output; the drill
+        asserts exactly that.  Returns the number of lanes preempted.
+        """
+        n = 0
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is not None:
+                self._preempt(slot)
+                n += 1
+        return n
 
 
 class BudgetScheduler(PagedScheduler):

@@ -104,6 +104,39 @@ class TestFailureRecovery:
         with pytest.raises(RuntimeError):
             pol.on_failure(RuntimeError("x"), 3)
 
+    def test_restart_policy_resets_after_healthy_period(self):
+        """reset_after_steps: the budget bounds failure *density* — a
+        long healthy stretch earns the counter back."""
+        pol = RestartPolicy(max_restarts=2, backoff_s=0.0,
+                            reset_after_steps=10)
+        pol.on_failure(RuntimeError("x"), 1)
+        pol.on_failure(RuntimeError("x"), 5)
+        assert pol.restarts == 2
+        # 10+ healthy steps since the last failure: counter resets first
+        pol.on_failure(RuntimeError("x"), 20)
+        assert pol.restarts == 1
+        pol.on_failure(RuntimeError("x"), 21)
+        with pytest.raises(RuntimeError):
+            pol.on_failure(RuntimeError("x"), 22)
+
+    def test_restart_policy_no_reset_within_window(self):
+        """Failures closer together than the window still exhaust."""
+        pol = RestartPolicy(max_restarts=2, backoff_s=0.0,
+                            reset_after_steps=10)
+        pol.on_failure(RuntimeError("x"), 1)
+        pol.on_failure(RuntimeError("x"), 9)
+        with pytest.raises(RuntimeError):
+            pol.on_failure(RuntimeError("x"), 15)  # only 6 steps healthy
+
+    def test_restart_policy_zero_window_never_resets(self):
+        """reset_after_steps=0 keeps the original accumulate-forever
+        semantics (the training loop's behavior, unchanged)."""
+        pol = RestartPolicy(max_restarts=2, backoff_s=0.0)
+        pol.on_failure(RuntimeError("x"), 0)
+        pol.on_failure(RuntimeError("x"), 10_000)
+        with pytest.raises(RuntimeError):
+            pol.on_failure(RuntimeError("x"), 1_000_000)
+
     def test_run_with_restarts_recovers(self):
         executed = []
         ckpt = {"step": 0}

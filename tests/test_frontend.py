@@ -295,3 +295,58 @@ def test_submit_validation_still_raises(rng):
         fe.submit([])
     with pytest.raises(ValueError, match="priority"):
         fe.submit([1], priority="urgent")
+
+
+# ------------------------------------------------- robustness satellites
+def test_deadline_sweep_double_cancel_guard(rng):
+    """A stream whose request already reached a terminal state (here:
+    cancelled out-of-band through the engine) must not be counted as a
+    timeout when its deadline later trips — ``engine.cancel`` returns
+    False and the sweep respects it, keeping the stream's real state."""
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    clock = ManualClock()
+    eng = _engine(cfg, params, max_new=50)
+    fe = ServeFrontend(eng, clock=clock)
+    s = fe.submit([1, 2, 3], deadline_s=1.0)
+    fe.step()
+    eng.cancel(s.req)              # out-of-band hang-up
+    clock.advance(5.0)             # deadline now blown as well
+    fe.step()
+    assert s.state == CANCELLED    # not overwritten to timed_out
+    assert s.req.finish_reason == "cancelled"
+    assert fe.timeout_count == 0
+
+
+def test_frontend_shed_and_timeout_counters(rng):
+    """shed/timeout land in the obs registry (labelled by reason), not
+    just the front-end's local tallies."""
+    from repro.obs import Telemetry
+
+    cfg = reduced_f32("qwen2.5-3b")
+    params = init_params(cfg, rng)
+    tel = Telemetry()
+    clock = ManualClock()
+    scfg = ServeConfig(max_new_tokens=50, max_queue=2,
+                       engine=EngineConfig(backend="reference"))
+    eng = ServeEngine(cfg, params, scfg, n_slots=1, max_len=64,
+                      mode="paged", page_size=4, prefill_chunk=3,
+                      telemetry=tel)
+    fe = ServeFrontend(eng, clock=clock)
+    keep = [fe.submit([1, 2, 3]), fe.submit([2, 3])]
+    doomed = fe.submit([3, 4])     # bounded queue: refused at the door
+    assert doomed.state == SHED
+    assert fe.shed_count == 1
+    assert tel.registry.counter(
+        "frontend_shed_total", reason=doomed.shed_reason).value == 1
+
+    clock.advance(0.1)
+    fe.step()
+    victim = keep[1]
+    victim.deadline_s = 0.01       # force the sweep to trip it
+    clock.advance(1.0)
+    fe.step()
+    assert victim.state == TIMED_OUT
+    assert fe.timeout_count == 1
+    assert tel.registry.counter("frontend_timeouts_total").value == 1
+    fe.drain()

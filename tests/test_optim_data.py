@@ -171,3 +171,43 @@ class TestDataPipeline:
         b = p.get_prefetched()
         assert b["tokens"].shape == (2, 8)
         p.stop()
+
+
+class TestPrefetchRobustness:
+    def _cfg(self):
+        return reduced_f32("qwen2.5-3b")
+
+    def test_full_queue_never_drops_a_batch(self):
+        """Slow consumer, prefetch=1: the worker hits queue.Full
+        constantly.  Every batch must still arrive exactly once, in
+        order — the old code regenerated (and so skipped) a batch on
+        every Full."""
+        import time
+
+        cfg = self._cfg()
+        p = DataPipeline(cfg, batch=2, seq_len=8, seed=3, prefetch=1)
+        expected = [DataPipeline(cfg, batch=2, seq_len=8,
+                                 seed=3).batch_at(i) for i in range(6)]
+        p.start_prefetch()
+        time.sleep(0.4)  # let the worker slam into Full repeatedly
+        try:
+            for i in range(6):
+                got = p.get_prefetched()
+                np.testing.assert_array_equal(
+                    got["tokens"], expected[i]["tokens"]), i
+                time.sleep(0.05)
+        finally:
+            p.stop()
+
+    def test_worker_exception_propagates(self):
+        """A worker that dies must surface its exception through
+        get_prefetched, not present as an eternal queue.Empty."""
+        cfg = self._cfg()
+        p = DataPipeline(cfg, batch=2, seq_len=8, prefetch=2)
+        p.batch_at = lambda step: (_ for _ in ()).throw(
+            OSError("disk gone"))
+        p.start_prefetch()
+        with pytest.raises(RuntimeError, match="prefetch worker") as ei:
+            p.get_prefetched(timeout=5.0)
+        assert isinstance(ei.value.__cause__, OSError)
+        p.stop()

@@ -46,6 +46,23 @@ def test_empty_prompt_rejected(mode):
 
 
 @pytest.mark.parametrize("mode", ["slots", "paged"])
+def test_out_of_vocab_prompt_rejected(mode):
+    """Token ids outside ``[0, vocab_size)`` are a caller bug: they embed
+    to an all-zero one-hot and decode to non-finite logits, which the
+    fault isolation would misdiagnose as a device fault (retry, then
+    quarantine).  Reject them at submit instead."""
+    cfg, params = _mk()
+    eng = _engine(cfg, params, mode)
+    for bad in ([1, cfg.vocab_size, 2], [-1, 1]):
+        with pytest.raises(ValueError, match="vocabulary"):
+            eng.submit(bad)
+    # boundary ids are fine and the engine is still usable
+    eng.submit([0, cfg.vocab_size - 1])
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].output) == 4
+
+
+@pytest.mark.parametrize("mode", ["slots", "paged"])
 def test_prompt_longer_than_max_len_rejected(mode):
     cfg, params = _mk()
     eng = _engine(cfg, params, mode, max_len=16)

@@ -156,7 +156,7 @@ def test_low_priority_not_starved_by_interactive_flood(rng):
     while not batch_req.done:
         # keep interactive pressure up: never let the queue go empty
         while len(eng.sched.queue) < 2:
-            eng.submit([300 + steps % 50, 301, 302], max_new_tokens=3,
+            eng.submit([100 + steps % 50, 101, 102], max_new_tokens=3,
                        priority="interactive", tenant="t-inter")
         done = eng.step()
         flood_done += len(done)
