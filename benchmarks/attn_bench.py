@@ -55,9 +55,9 @@ def _sweep_point(context, page, kv_bits, *, batch, hkv, group, dh, reps,
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.paged_attention.ops import (decode_attn_bytes,
-                                                  synthetic_paged_case)
+    from repro.kernels.paged_attention.ops import synthetic_paged_case
     from repro.models.attention import attend_paged_decode
+    from repro.obs.costs import decode_attn_bytes
 
     rng = np.random.default_rng(0)
     hq = hkv * group
@@ -113,9 +113,9 @@ def _prefill_sweep_point(context, page, kv_bits, *, batch, hkv, group, dh,
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.kernels.paged_attention.ops import (prefill_attn_bytes,
-                                                  synthetic_prefill_case)
+    from repro.kernels.paged_attention.ops import synthetic_prefill_case
     from repro.models.attention import attend_paged_prefill
+    from repro.obs.costs import prefill_attn_bytes
 
     rng = np.random.default_rng(0)
     hq = hkv * group

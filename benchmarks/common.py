@@ -15,14 +15,17 @@ Import pattern (the benches run both as scripts and via
         from common import build_model, make_engine, tree_bytes
 
 Timing goes through :func:`wall_timer` / :func:`time_call` — one
-implementation of the ``t0 = perf_counter(); ...; wall = ...`` block
-every bench used to hand-roll, which also feeds the walls into the
-``repro.obs`` global registry when observability is enabled.
+implementation of the start/stop-and-subtract block every bench used to
+hand-roll, reading the one serve-path timebase (``repro.obs.clock``; CI
+greps benchmarks/ for hand-rolled wall-clock reads) and feeding the
+walls into the ``repro.obs`` global registry when observability is
+enabled.
 """
 
 import contextlib
 import dataclasses
-import time
+
+from repro.obs import clock
 
 
 class _WallBox:
@@ -48,11 +51,11 @@ def wall_timer(name=None):
     by ``name``), so a traced bench run carries its own timing metrics.
     """
     box = _WallBox()
-    t0 = time.perf_counter()
+    t0 = clock.now()
     try:
         yield box
     finally:
-        box.wall = time.perf_counter() - t0
+        box.wall = clock.now() - t0
         if name is not None:
             import repro.obs as obs
             if obs.enabled:
@@ -138,7 +141,10 @@ def bench_env():
 def write_bench(out, record):
     """Write a BENCH_*.json record, stamping :func:`bench_env` into it —
     every bench goes through here so no result file ships without its
-    device/interpret provenance.  No-op when ``out`` is falsy."""
+    device/interpret provenance — and append its comparable metrics to
+    ``BENCH_history.jsonl`` next to it (``benchmarks.history``; the
+    perf-regression gate compares future runs against this line).
+    No-op when ``out`` is falsy."""
     import json
 
     if not out:
@@ -147,6 +153,13 @@ def write_bench(out, record):
     with open(out, "w") as f:
         json.dump(record, f, indent=2)
     print(f"# wrote {out}")
+    try:
+        from benchmarks.history import append_record
+    except ImportError:  # executed as a loose script
+        from history import append_record
+    hpath = append_record(out, record)
+    if hpath:
+        print(f"# history -> {hpath}")
 
 
 def tree_bytes(t):

@@ -1,0 +1,365 @@
+#!/usr/bin/env python
+"""Cost-ledger benchmark: modeled vs compiler-measured traffic, and the
+ledger's own overhead.
+
+Two questions, one bench:
+
+1. **Is the model honest?**  For one paged decode step and one chunked
+   prefill at the bench shapes, the analytic ``repro.obs.costs`` tables
+   are compared against what XLA actually compiled —
+   ``jax.jit(...).lower().compile().cost_analysis()`` routed through
+   ``repro.roofline.analysis.compiled_costs`` (trip-count-aware HLO
+   reanalysis; XLA's own counter visits scan bodies once).  Modeled vs
+   measured FLOPs and bytes/token are recorded per attention backend
+   (``gather`` and the fused kernel).  The hard 5% FLOPs gate lives in
+   ``tests/test_costs.py``; this bench records the same comparison at
+   bench scale.  On a non-TPU host the fused backend runs the Pallas
+   *interpreter*, whose compiled HLO measures the interpreter loop, not
+   the kernel — its measured column is recorded but carries
+   ``measured_is_interpreter: true`` and is compared on bytes only
+   informationally.
+
+2. **Is the ledger free enough?**  The identical closed-loop workload is
+   served with the ledger off (``NULL_TELEMETRY``) and on
+   (``Telemetry(trace=False)`` — metrics + cost ledger, the production
+   configuration), reps interleaved, best-of-reps compared, and the
+   ledger-on/ledger-off tok/s ratio recorded.  A second byte-identical
+   ledger-off arm runs interleaved with the other two and its spread
+   against the first is recorded as a *noise witness*: on shared CI
+   hosts two identical arms routinely differ by 5-10% (measured here),
+   so the end-to-end ratio is informational.  The **enforced** 3%
+   overhead gate is deterministic instead: the telemetry hot-path calls
+   (``on_costs`` with the engine's real cost table, ``on_token``, the
+   step frame) are microbenchmarked in a tight loop, scaled by the
+   serve run's actual call counts, and the implied µs/token is compared
+   against 3% of the ledger-off per-token wall.  That measures the code
+   being gated — not the host's scheduler luck — and still fails hard
+   if a change makes the charge path an order of magnitude slower.
+   Token identity between arms is asserted always.
+
+Results land in ``BENCH_costs.json`` plus the repo-standard CSV rows.
+
+  PYTHONPATH=src python benchmarks/costs_bench.py            # full run
+  PYTHONPATH=src python benchmarks/costs_bench.py --smoke    # CI-sized
+"""
+
+import argparse
+import functools
+import gc
+import json
+
+try:
+    from benchmarks.common import (build_model, make_engine,
+                                   wall_timer, write_bench)
+except ImportError:  # executed as a loose script
+    from common import build_model, make_engine, wall_timer, write_bench
+
+OVERHEAD_BUDGET = 0.03  # ledger-on may cost at most 3% tok/s
+
+# decode/prefill validation shapes (mirrors the serve bench geometry)
+B, PAGE, NBLK, CHUNK = 4, 8, 4, 16
+
+
+def _workload(cfg, n_reqs: int, prompt_len: int):
+    return [
+        [(5 * i + j) % cfg.vocab_size for j in range(prompt_len + i % 4)]
+        for i in range(n_reqs)
+    ]
+
+
+def _serve_once(cfg, params, prompts, telemetry, tag, *, n_slots, max_len,
+                max_new):
+    eng = make_engine(cfg, params, n_slots=n_slots, max_len=max_len,
+                      max_new=max_new, telemetry=telemetry)
+    for p in prompts:
+        eng.submit(list(p))
+    # GC pauses (10-30ms) would swamp the 3% overhead gate at these
+    # ~85ms serve walls; collect up front, then keep the cycle collector
+    # out of the timed region
+    gc.collect()
+    gc.disable()
+    try:
+        with wall_timer(None) as w:
+            done = eng.run()
+    finally:
+        gc.enable()
+    gen = sum(len(r.output) for r in done)
+    outs = {r.rid: r.output for r in done}
+    return {
+        "arm": tag,
+        "gen_tokens": gen,
+        "wall_s": round(w.wall, 5),
+        "tok_per_s": round(gen / w.wall, 2) if w.wall > 0 else 0.0,
+    }, outs, eng
+
+
+def ledger_us_per_token(cfg, *, n_slots: int, max_len: int, page_size: int,
+                        tokens_per_step: float, charges_per_step: float,
+                        loops: int = 2000, reps: int = 3):
+    """Deterministic per-token cost of the telemetry hot path.
+
+    Microbenchmarks the calls the serve loop makes per step — one
+    ``on_costs`` charge of the real memoized decode table per dispatch,
+    the step frame (``step_begin``/``step_end`` + ``on_decode``), and
+    one ``on_token`` per generated token — then scales by the measured
+    call rates of the serve run.  Pure-python tight loops: stable to a
+    few percent where the end-to-end A/B is stable to ~10% (see module
+    docstring).
+    """
+    from repro.obs import Telemetry, clock, costs
+
+    tel = Telemetry(trace=False)
+    dims = costs.model_dims(cfg)
+    table = costs.decode_step_costs(
+        dims, batch=n_slots, context=max_len, page_size=page_size)
+    rids = list(range(n_slots))
+    t = clock.now()
+    for rid in rids:
+        tel.on_submit(rid, 8, t)
+    lanes = [(s, rid) for s, rid in enumerate(rids)]
+
+    def loop_us(fn):
+        best = None
+        for _ in range(reps):
+            t0 = clock.now()
+            for _ in range(loops):
+                fn()
+            dt = clock.now() - t0
+            best = dt if best is None else min(best, dt)
+        return 1e6 * best / loops
+
+    us_costs = loop_us(lambda: tel.on_costs(table, rids))
+    us_token = loop_us(lambda: tel.on_token(rids[0], clock.now()))
+    def step_frame():
+        tel.step_begin()
+        tel.on_decode(lanes, clock.now())
+        tel.step_end(clock.now())
+    us_step = loop_us(step_frame)
+    per_tok = ((us_costs * charges_per_step + us_step)
+               / max(tokens_per_step, 1e-9)) + us_token
+    return {
+        "us_on_costs": round(us_costs, 3),
+        "us_on_token": round(us_token, 3),
+        "us_step_frame": round(us_step, 3),
+        "charges_per_step": round(charges_per_step, 3),
+        "tokens_per_step": round(tokens_per_step, 3),
+        "us_per_token": round(per_tok, 3),
+    }
+
+
+def modeled_vs_measured(cfg, kv_bits: int = 0):
+    """Modeled (obs.costs) vs compiled (HLO) FLOPs and bytes/token for
+    one decode step and one prefill chunk, per attention backend."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.engine.backends import default_interpret
+    from repro.models import decode_step_paged, init_params, prefill_chunk
+    from repro.obs import costs
+    from repro.roofline.analysis import compiled_costs
+    from repro.serve.pages import init_kv_pages
+
+    dims = costs.model_dims(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pages = init_kv_pages(cfg, B * NBLK + 1, PAGE, kv_bits=kv_bits)
+    bt = jnp.arange(1, 1 + B * NBLK, dtype=jnp.int32).reshape(B, NBLK)
+    ctx = NBLK * PAGE
+    fused = "pallas_interpret" if default_interpret() else "pallas_tpu"
+    rows = []
+    for backend in ("gather", fused):
+        interp = backend == "pallas_interpret"
+        for phase in ("decode", "prefill"):
+            if phase == "decode":
+                fn = jax.jit(functools.partial(
+                    decode_step_paged, cfg=cfg, eng=None,
+                    attn_backend=backend))
+                args = (params, pages, bt, jnp.full((B,), 5, jnp.int32),
+                        jnp.ones((B,), bool), jnp.zeros((B, 1), jnp.int32))
+                table = costs.decode_step_costs(
+                    dims, batch=B, context=ctx, page_size=PAGE,
+                    attn_backend=backend, kv_bits=kv_bits)
+                toks = B
+            else:
+                fn = jax.jit(functools.partial(
+                    prefill_chunk, cfg=cfg, eng=None, attn_backend=backend))
+                args = (params, pages, bt, jnp.zeros((B, CHUNK), jnp.int32),
+                        jnp.zeros((B,), jnp.int32),
+                        jnp.full((B,), CHUNK, jnp.int32))
+                table = costs.prefill_chunk_costs(
+                    dims, batch=B, chunk=CHUNK, context=ctx,
+                    page_size=PAGE, attn_backend=backend, kv_bits=kv_bits)
+                toks = B * CHUNK
+            meas = compiled_costs(fn.lower(*args).compile())
+            model = costs.total_cost(table)
+            rows.append({
+                "phase": phase,
+                "attn_backend": backend,
+                "kv_bits": kv_bits,
+                "tokens": toks,
+                "modeled_flops": model.flops,
+                "measured_flops": meas["flops"],
+                "flops_ratio": round(
+                    model.flops / max(meas["flops"], 1.0), 4),
+                "modeled_bytes_per_tok": round(model.bytes / toks, 1),
+                "measured_bytes_per_tok": round(meas["bytes"] / toks, 1),
+                "measured_is_interpreter": interp,
+            })
+    return rows
+
+
+def run(arch: str = "qwen2.5-3b", n_reqs: int = 16, n_slots: int = 4,
+        prompt_len: int = 12, max_new: int = 8, max_len: int = 64,
+        reps: int = 6, out: str = "BENCH_costs.json"):
+    """Bench entry point (also registered in benchmarks.run).  Returns
+    the repo-standard (name, us_per_call, derived) CSV rows."""
+    from repro.obs import Telemetry
+    from repro.obs.telemetry import NULL_TELEMETRY
+
+    cfg, params = build_model(arch)
+    prompts = _workload(cfg, n_reqs, prompt_len)
+    kw = dict(n_slots=n_slots, max_len=max_len, max_new=max_new)
+
+    # "off2" is byte-identical to "off": the pair calibrates how much two
+    # arms that *cannot* differ still differ on this host (see docstring)
+    arms = {
+        "off": lambda: NULL_TELEMETRY,
+        "ledger": lambda: Telemetry(trace=False),
+        "off2": lambda: NULL_TELEMETRY,
+    }
+    # one throwaway pass warms process-global jit state for everyone
+    _serve_once(cfg, params, prompts[:2], NULL_TELEMETRY, "warm", **kw)
+
+    best = {}
+    outs = {}
+    ledger = None
+    obs_snap = None
+    for _ in range(reps):
+        for tag, mk in arms.items():  # interleaved off/ledger/off2
+            tel = mk()
+            res, o, eng = _serve_once(cfg, params, prompts, tel, tag, **kw)
+            outs.setdefault(tag, o)
+            assert o == outs[tag], f"{tag} arm tokens drifted across reps"
+            if tag not in best or res["wall_s"] < best[tag]["wall_s"]:
+                best[tag] = res
+            if tag == "ledger":
+                m = eng.metrics()
+                ledger = m["costs"]
+                obs_snap = m["obs"]
+
+    identical = outs["off"] == outs["ledger"] == outs["off2"]
+    tok_off = best["off"]["tok_per_s"]
+    tok_on = best["ledger"]["tok_per_s"]
+    w_nulls = (best["off"]["wall_s"], best["off2"]["wall_s"])
+    null_spread = max(w_nulls) / min(w_nulls)
+
+    # deterministic overhead gate: microbench the hot path, scale by the
+    # serve run's actual call rates (see module docstring for why the
+    # end-to-end ratio above is recorded but not gated)
+    snap = obs_snap["metrics"]
+    n_steps = max(snap["counters"].get("serve_steps_total", 1), 1)
+    n_decode = snap["histograms"].get(
+        "serve_decode_step_s", {}).get("count", 0)
+    n_prefill = snap["histograms"].get(
+        "serve_prefill_chunk_s", {}).get("count", 0)
+    gen_led = max(best["ledger"]["gen_tokens"], 1)
+    micro = ledger_us_per_token(
+        cfg, n_slots=n_slots, max_len=max_len, page_size=8,
+        tokens_per_step=gen_led / n_steps,
+        charges_per_step=(n_decode + n_prefill) / n_steps)
+    off_us_per_tok = 1e6 * best["off"]["wall_s"] / max(
+        best["off"]["gen_tokens"], 1)
+    overhead_share = micro["us_per_token"] / off_us_per_tok
+    overhead_ok = overhead_share <= OVERHEAD_BUDGET
+
+    validation = []
+    for kv_bits in (0, 8):
+        validation.extend(modeled_vs_measured(cfg, kv_bits))
+    gen = max(best["ledger"]["gen_tokens"], 1)
+
+    rows = [
+        (f"costs_{tag}",
+         round(1e6 * r["wall_s"] / max(r["gen_tokens"], 1), 1),
+         f"tok/s={r['tok_per_s']}")
+        for tag, r in best.items()
+    ]
+    rows += [
+        (f"costs.model.{v['phase']}.{v['attn_backend']}.kv{v['kv_bits']}",
+         "",
+         f"flops_ratio={v['flops_ratio']}"
+         f" modeled_B/tok={v['modeled_bytes_per_tok']}"
+         f" measured_B/tok={v['measured_bytes_per_tok']}")
+        for v in validation
+    ]
+    record = {
+        "bench": "costs",
+        "arch": arch,
+        "reduced": True,
+        "dtype": "float32",
+        "workload": {"n_reqs": n_reqs, "n_slots": n_slots,
+                     "prompt_len": prompt_len, "max_new": max_new,
+                     "max_len": max_len, "reps": reps},
+        "results": list(best.values()),
+        "ledger_over_off_tok_per_s": round(tok_on / max(tok_off, 1e-9), 4),
+        "overhead_budget": OVERHEAD_BUDGET,
+        "null_spread": round(null_spread, 4),
+        "ledger_microbench": micro,
+        "off_us_per_token": round(off_us_per_tok, 1),
+        "ledger_overhead_share": round(overhead_share, 4),
+        "overhead_within_budget": bool(overhead_ok),
+        "token_identical": bool(identical),
+        "ledger": {
+            "total_flops": ledger["total_flops"],
+            "total_bytes": ledger["total_bytes"],
+            "wasted_flops": ledger["wasted_flops"],
+            "ledger_bytes_per_tok": round(ledger["total_bytes"] / gen, 1),
+            "by_op": ledger["by_op"],
+        },
+        "modeled_vs_measured": validation,
+    }
+    write_bench(out, record)
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer requests, short generations")
+    ap.add_argument("--out", default="BENCH_costs.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        # the 3% overhead gate needs per-rep serve walls long enough
+        # (~300ms) that scheduler jitter spikes dilute — short 8-req
+        # walls made best-of-reps flicker across the budget line
+        rows = run(n_reqs=16, max_new=16, reps=8, out=args.out)
+    else:
+        rows = run(out=args.out)
+    print("name,us_per_call,derived")
+    for row in rows:
+        print(",".join(str(v) for v in row))
+
+    with open(args.out) as f:
+        record = json.load(f)
+    if not record["token_identical"]:
+        raise SystemExit("the cost ledger changed the generated tokens")
+    if not record["overhead_within_budget"]:
+        raise SystemExit(
+            f"ledger hot path costs {record['ledger_overhead_share']:.2%} "
+            f"of a serve token "
+            f"({record['ledger_microbench']['us_per_token']}us vs "
+            f"{record['off_us_per_token']}us/token) — over the "
+            f"{record['overhead_budget']:.0%} overhead budget")
+    bad = [v for v in record["modeled_vs_measured"]
+           if not v["measured_is_interpreter"]
+           and not 0.95 <= v["flops_ratio"] <= 1.05]
+    if bad:
+        raise SystemExit(f"modeled FLOPs off by >5% vs compiled: {bad}")
+    print(f"# ledger/off tok/s={record['ledger_over_off_tok_per_s']}  "
+          f"null_spread={record['null_spread']}  "
+          f"overhead_share={record['ledger_overhead_share']}  "
+          f"token_identical={record['token_identical']}  "
+          f"validated={len(record['modeled_vs_measured'])} points")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,256 @@
+"""Bench-result history + perf regression gate.
+
+Every ``write_bench`` call appends one provenance-stamped line to
+``BENCH_history.jsonl`` next to the result file: the bench name (from
+the ``BENCH_<name>.json`` filename), the :func:`~common.bench_env`
+provenance (``device_kind``, ``interpret_mode``), a UTC timestamp, the
+current git commit when one is resolvable, and every *comparable*
+numeric metric found in the record — keys whose leaf name contains
+``tok_per_s`` (higher is better) or ``bytes_per_tok`` (lower is
+better), flattened as dotted paths.
+
+``check_regression`` then compares a fresh record against the **best**
+prior history line with the same ``(bench, device_kind,
+interpret_mode)`` triple — results from a different device, or from
+Pallas interpret mode vs compiled kernels, are never comparable and are
+silently skipped.  A metric regresses when it is worse than the best
+prior by more than ``tol`` (default 10%).  CLI::
+
+    python -m benchmarks.history --check BENCH_serve.json ...   # gate
+    python -m benchmarks.history --self-test                    # prove
+                                        # the gate fires on a synthetic
+                                        # 20% tok/s regression
+
+The history file is append-only JSONL so concurrent benches cannot
+clobber each other and a corrupt line never poisons the file — readers
+skip lines that fail to parse.
+"""
+
+import json
+import os
+from datetime import datetime, timezone
+
+HISTORY_NAME = "BENCH_history.jsonl"
+
+# leaf-name substrings that make a numeric metric comparable, with
+# direction: +1 = higher is better, -1 = lower is better
+_COMPARABLE = (("tok_per_s", +1), ("bytes_per_tok", -1))
+
+
+def _direction(key):
+    """+1 / -1 for a comparable dotted key, else None."""
+    leaf = key.rsplit(".", 1)[-1]
+    for frag, sign in _COMPARABLE:
+        if frag in leaf:
+            return sign
+    return None
+
+
+def comparable_metrics(record, prefix=""):
+    """Flatten a bench record's comparable numeric leaves to
+    ``{dotted.path: value}`` (see module docstring for which leaves
+    qualify)."""
+    out = {}
+    if isinstance(record, dict):
+        for k, v in record.items():
+            key = f"{prefix}.{k}" if prefix else str(k)
+            if isinstance(v, dict):
+                out.update(comparable_metrics(v, key))
+            elif isinstance(v, list):
+                for i, item in enumerate(v):
+                    if isinstance(item, dict):
+                        out.update(comparable_metrics(item, f"{key}[{i}]"))
+            elif isinstance(v, (int, float)) and not isinstance(v, bool):
+                if _direction(key) is not None:
+                    out[key] = float(v)
+    return out
+
+
+def _git_commit():
+    import subprocess
+
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        return None
+
+
+def history_path_for(out):
+    return os.path.join(os.path.dirname(os.path.abspath(out)),
+                        HISTORY_NAME)
+
+
+def bench_name_for(out):
+    """``BENCH_serve.json`` -> ``serve`` (else the bare stem)."""
+    stem = os.path.splitext(os.path.basename(out))[0]
+    return stem[len("BENCH_"):] if stem.startswith("BENCH_") else stem
+
+
+def make_entry(out, record):
+    """The history line for one written bench record (provenance +
+    comparable metrics); None when the record has nothing comparable."""
+    metrics = comparable_metrics(record)
+    if not metrics:
+        return None
+    return {
+        "bench": bench_name_for(out),
+        "device_kind": record.get("device_kind"),
+        "interpret_mode": record.get("interpret_mode"),
+        "ts": datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "commit": _git_commit(),
+        "metrics": metrics,
+    }
+
+
+def append_record(out, record, history_path=None):
+    """Append the history line for ``record`` (as written to ``out``).
+    Returns the history path, or None when nothing comparable exists."""
+    entry = make_entry(out, record)
+    if entry is None:
+        return None
+    path = history_path or history_path_for(out)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return path
+
+
+def load_history(path):
+    """Parsed history lines (corrupt lines skipped, never fatal)."""
+    entries = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entries.append(json.loads(line))
+            except (ValueError, TypeError):
+                continue
+    return entries
+
+
+def best_prior(entries, bench, device_kind, interpret_mode):
+    """Per-metric best over matching history lines: ``{key: best}``."""
+    best = {}
+    for e in entries:
+        if (e.get("bench") != bench
+                or e.get("device_kind") != device_kind
+                or e.get("interpret_mode") != interpret_mode):
+            continue
+        for key, val in (e.get("metrics") or {}).items():
+            sign = _direction(key)
+            if sign is None or not isinstance(val, (int, float)):
+                continue
+            cur = best.get(key)
+            if cur is None or (sign > 0) == (val > cur):
+                best[key] = float(val)
+    return best
+
+
+def check_regression(record, history_path, bench, tol=0.10):
+    """Regressions of ``record`` vs the best matching history line.
+
+    Returns ``[(key, current, best), ...]`` for every comparable metric
+    worse than the best prior by more than ``tol`` (relative).  An empty
+    history (or no matching triple — different device, interpret mode)
+    returns no regressions: absence of a baseline is not a failure.
+    """
+    current = comparable_metrics(record)
+    best = best_prior(load_history(history_path), bench,
+                      record.get("device_kind"),
+                      record.get("interpret_mode"))
+    regressions = []
+    for key, val in sorted(current.items()):
+        ref = best.get(key)
+        if ref is None or ref == 0:
+            continue
+        sign = _direction(key)
+        worse = (val < ref * (1.0 - tol) if sign > 0
+                 else val > ref * (1.0 + tol))
+        if worse:
+            regressions.append((key, val, ref))
+    return regressions
+
+
+def _check_files(paths, history_path, tol):
+    failed = False
+    for out in paths:
+        with open(out) as f:
+            record = json.load(f)
+        hpath = history_path or history_path_for(out)
+        bench = bench_name_for(out)
+        regs = check_regression(record, hpath, bench, tol)
+        if regs:
+            failed = True
+            print(f"REGRESSION {out} (vs best in {hpath}):")
+            for key, val, ref in regs:
+                pct = abs(val - ref) / ref * 100.0
+                print(f"  {key}: {val:.6g} vs best {ref:.6g} "
+                      f"({pct:.1f}% worse, tol {tol * 100:.0f}%)")
+        else:
+            n = len(comparable_metrics(record))
+            print(f"ok {out}: {n} comparable metric(s), "
+                  f"no regression beyond {tol * 100:.0f}%")
+    return 1 if failed else 0
+
+
+def _self_test(tol):
+    """Prove the gate fires: a synthetic 20% tok/s regression (and a 20%
+    bytes/token inflation) against a recorded baseline MUST fail, and
+    the baseline against itself must pass."""
+    import tempfile
+
+    base = {"device_kind": "cpu", "interpret_mode": True,
+            "decode": {"tok_per_s": 100.0, "bytes_per_tok": 1000.0}}
+    bad = {"device_kind": "cpu", "interpret_mode": True,
+           "decode": {"tok_per_s": 80.0, "bytes_per_tok": 1200.0}}
+    other = {"device_kind": "TPU v4", "interpret_mode": False,
+             "decode": {"tok_per_s": 80.0, "bytes_per_tok": 1200.0}}
+    with tempfile.TemporaryDirectory() as d:
+        out = os.path.join(d, "BENCH_selftest.json")
+        hpath = append_record(out, base)
+        assert hpath and load_history(hpath), "baseline did not append"
+        assert not check_regression(base, hpath, "selftest", tol), \
+            "baseline regressed against itself"
+        regs = check_regression(bad, hpath, "selftest", tol)
+        keys = {k for k, _, _ in regs}
+        assert "decode.tok_per_s" in keys, \
+            f"20% tok/s regression not caught (got {regs})"
+        assert "decode.bytes_per_tok" in keys, \
+            f"20% bytes/token inflation not caught (got {regs})"
+        assert not check_regression(other, hpath, "selftest", tol), \
+            "cross-device records must never be compared"
+    print("history self-test ok: synthetic 20% regression fails the "
+          f"gate at tol {tol * 100:.0f}%, cross-device records skip")
+    return 0
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--check", nargs="+", metavar="BENCH_JSON",
+                    help="gate these result files against history")
+    ap.add_argument("--history", default=None,
+                    help="explicit history file (default: "
+                         f"{HISTORY_NAME} next to each result)")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="relative regression tolerance (default 0.10)")
+    ap.add_argument("--self-test", action="store_true",
+                    help="prove the gate fires on a synthetic regression")
+    args = ap.parse_args(argv)
+    if args.self_test:
+        return _self_test(args.tol)
+    if not args.check:
+        ap.error("nothing to do: pass --check FILE... or --self-test")
+    return _check_files(args.check, args.history, args.tol)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

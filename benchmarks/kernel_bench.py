@@ -3,8 +3,6 @@ column reports the roofline-relevant quantities: bytes/weight, digit passes,
 arithmetic intensity on the TPU target — and, for the paged-attention
 family, modeled bytes per decode token)."""
 
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -12,18 +10,19 @@ import numpy as np
 from repro.engine import EnginePlan, pack_linear
 from repro.kernels.bitplane_gemv.ref import bitplane_gemv_ref
 from repro.kernels.int8_matvec.ops import int8_matvec
-from repro.kernels.paged_attention.ops import (decode_attn_bytes,
-                                               synthetic_paged_case)
+from repro.kernels.paged_attention.ops import synthetic_paged_case
 from repro.models.attention import attend_paged_decode
+from repro.obs.costs import decode_attn_bytes
+
+try:
+    from benchmarks.common import time_call
+except ImportError:  # executed as a loose script
+    from common import time_call
 
 
 def _time(fn, *args, reps=3, **kw):
-    fn(*args, **kw).block_until_ready()  # compile + warm
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args, **kw)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps * 1e6
+    """Mean microseconds per call (the shared rep-loop timer)."""
+    return time_call(fn, *args, reps=reps, **kw) * 1e6
 
 
 def run():

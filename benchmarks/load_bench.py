@@ -39,7 +39,6 @@ Results land in ``BENCH_load.json`` plus repo-standard CSV rows.
 import argparse
 import json
 import random
-import time
 
 try:
     from benchmarks.common import (build_model, make_engine, percentile,
@@ -48,6 +47,7 @@ except ImportError:  # executed as a loose script
     from common import (build_model, make_engine, percentile, wall_timer,
                         write_bench)
 
+from repro.obs import clock
 from repro.obs.clock import now as _now
 
 # priority-class mix: (priority, tenant, prompt_len_range, weight)
@@ -108,7 +108,7 @@ def _drive(eng, work, arrivals, max_new: int):
                 else:
                     stall_now.pop(s, None)
         elif i < len(work):  # idle until the next scheduled arrival
-            time.sleep(min(max(arrivals[i] - now, 0.0), 0.002))
+            clock.sleep(min(max(arrivals[i] - now, 0.0), 0.002))
         else:
             break
     wall = _now() - t0

@@ -1,5 +1,9 @@
 """TPU roofline summary: reads experiments/dryrun/*.json (produced by
-launch/dryrun.py) and emits the per-cell three-term roofline table."""
+launch/dryrun.py) and emits the per-cell three-term roofline table, plus
+the serve-path per-op cost rows priced through ``repro.obs.costs`` — the
+single analytic FLOPs/bytes model the serve engine's ledger, the
+attention benches and this table now share (no local bytes arithmetic
+here: one bytes model per op)."""
 
 import glob
 import json
@@ -7,6 +11,46 @@ import os
 
 OUT = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                    "experiments", "dryrun")
+
+# serve-path roofline points: reduced arch, one decode + one prefill
+# shape matching the serve bench geometry
+SERVE_ARCH = "qwen2.5-3b"
+SERVE_SHAPE = {"batch": 4, "context": 256, "page_size": 8, "chunk": 16}
+
+
+def serve_cost_rows(arch: str = SERVE_ARCH):
+    """Per-op modeled cost rows for one paged decode step and one chunked
+    prefill — ``repro.obs.costs`` tables, the same ones the engine's
+    ledger charges, so the roofline table and the live metrics can never
+    disagree on what a step costs."""
+    from repro.config import get_reduced
+    from repro.obs import costs
+
+    dims = costs.model_dims(get_reduced(arch))
+    sh = SERVE_SHAPE
+    rows = []
+    for phase, backend in (("decode", "gather"), ("decode", "pallas_tpu"),
+                           ("prefill", "gather"), ("prefill", "pallas_tpu")):
+        if phase == "decode":
+            table = costs.decode_step_costs(
+                dims, batch=sh["batch"], context=sh["context"],
+                page_size=sh["page_size"], attn_backend=backend)
+            toks = sh["batch"]
+        else:
+            table = costs.prefill_chunk_costs(
+                dims, batch=sh["batch"], chunk=sh["chunk"],
+                context=sh["context"], page_size=sh["page_size"],
+                attn_backend=backend)
+            toks = sh["batch"] * sh["chunk"]
+        tot = costs.total_cost(table)
+        tag = "fused" if backend.startswith("pallas") else "gather"
+        rows.append((
+            f"roofline.serve.{phase}.{tag}", "",
+            f"arch={arch} flops/tok={tot.flops / toks:.3e}"
+            f" bytes/tok={tot.bytes / toks:.3e}"
+            f" arith_intensity={tot.flops / max(tot.bytes, 1):.2f}flop/B"
+            f" ops={len(table)}"))
+    return rows
 
 
 def run():
@@ -30,4 +74,5 @@ def run():
     if not rows:
         rows.append(("roofline.missing", "",
                      "run experiments/run_dryruns.py first"))
+    rows.extend(serve_cost_rows())
     return rows

@@ -13,6 +13,7 @@ def main() -> None:
     from benchmarks import (
         attn_bench,
         chaos_bench,
+        costs_bench,
         engine_model,
         fig4_scaling,
         fig6_latency,
@@ -42,6 +43,7 @@ def main() -> None:
         "load": load_bench.run,
         "obs": obs_bench.run,
         "chaos": chaos_bench.run,
+        "costs": costs_bench.run,
     }
     from benchmarks.common import bench_env
 

@@ -93,6 +93,12 @@ class ChaosInjector:
                     f"unknown chaos site {site!r}; choose from {SITES}")
         self._counts: Dict[str, int] = {}
         self.log: List[Tuple[str, int]] = []
+        # observability sink: the owning engine points this at its
+        # telemetry (ServeEngine sets chaos.obs = self.obs) so every
+        # fired fault — including allocator-internal sites like
+        # ``page_grant`` — lands in the metrics registry without each
+        # call site having to report separately.  None = unobserved.
+        self.obs = None
 
     # ------------------------------------------------------------ decisions
     def _rng(self, site: str, idx: int, salt: str = "") -> random.Random:
@@ -124,6 +130,8 @@ class ChaosInjector:
                 fired = self._rng(site, idx).random() < rate
         if fired:
             self.log.append((site, idx))
+            if self.obs is not None:
+                self.obs.on_chaos(site)
         return fired
 
     def pick(self, site: str, n: int) -> int:

@@ -14,9 +14,10 @@ tests/drills exercise the same recovery path a real run would take.
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Callable, Optional
+
+from repro.obs import clock
 
 
 class SimulatedNodeFailure(RuntimeError):
@@ -102,6 +103,6 @@ def run_with_restarts(
             ):
                 raise
             delay = policy.on_failure(exc, step)
-            time.sleep(delay)
+            clock.sleep(delay)
             step = restore_fn()
     return policy.restarts

@@ -9,11 +9,13 @@ interpret mapping lives here, next to the kernel.  A ``mesh`` routes the
 call through ``repro.engine.sharded``'s shard_map wrapper (KV heads over
 the plan's model axis — the pool is already placed that way).
 
-Also home of :func:`decode_attn_bytes` / :func:`prefill_attn_bytes`, the
-bytes-moved models the attention benchmarks and the micro-bench derived
-columns share: the fused kernels read each pool page exactly once per
-(lane, kv head) while the gather backend pays pool-read + view-write +
-view-read for the same logical view.
+:func:`decode_attn_bytes` / :func:`prefill_attn_bytes` — the bytes-moved
+models the attention benchmarks and the micro-bench derived columns
+share — are re-exported from :mod:`repro.obs.costs`, the one analytic
+cost model the serve-path ledger, the roofline summary and every
+benchmark now price against: the fused kernels read each pool page
+exactly once per (lane, kv head) while the gather backend pays
+pool-read + view-write + view-read for the same logical view.
 """
 
 from __future__ import annotations
@@ -25,6 +27,10 @@ import jax.numpy as jnp
 from repro.kernels.paged_attention.kernel import (
     paged_attention_pallas,
     paged_prefill_pallas,
+)
+from repro.obs.costs import (  # noqa: F401  (re-export: THE bytes model)
+    decode_attn_bytes,
+    prefill_attn_bytes,
 )
 
 PREFILL_BLOCK_Q = 128  # cap on query rows per prefill grid step
@@ -198,79 +204,3 @@ def synthetic_prefill_case(rng, *, batch: int, nblk: int, page: int,
     return case
 
 
-def decode_attn_bytes(
-    backend: str,
-    *,
-    batch: int,
-    context: int,
-    n_kv_heads: int,
-    head_dim: int,
-    n_q_heads: int,
-    page_size: int,
-    kv_bits: int = 0,
-    act_itemsize: int = 4,
-) -> int:
-    """Modeled HBM bytes moved by ONE layer's decode-attention read path.
-
-    ``gather`` (the reference backend) materializes the logical KV view
-    before attending — per K and per V it pays pool read + view write +
-    view read (3× the view), and the int8 path pays the same 3× for each
-    scale pool.  The fused kernel (``pallas_interpret`` / ``pallas_tpu``)
-    reads each mapped page exactly once per (lane, kv head) and never
-    writes an intermediate: 1× the view (+ 1× scales), plus the block
-    table itself.  Q read and O write are identical on both paths and
-    included for honest totals.
-    """
-    import math
-
-    kv_isz = 1 if kv_bits else act_itemsize
-    n_blocks = max(1, math.ceil(context / page_size))
-    view = batch * n_blocks * page_size * n_kv_heads * head_dim * kv_isz
-    scale_view = (batch * n_blocks * page_size * n_kv_heads * 2
-                  if kv_bits else 0)  # bf16 scales
-    qo = 2 * batch * n_q_heads * head_dim * act_itemsize  # Q read + O write
-    tables = batch * n_blocks * 4                         # int32 block table
-    if backend == "gather":
-        return 2 * 3 * view + 2 * 3 * scale_view + qo + tables
-    if backend in ("pallas_interpret", "pallas_tpu"):
-        return 2 * view + 2 * scale_view + qo + tables
-    raise ValueError(f"unknown attention backend {backend!r}")
-
-
-def prefill_attn_bytes(
-    backend: str,
-    *,
-    batch: int,
-    chunk: int,
-    context: int,
-    n_kv_heads: int,
-    head_dim: int,
-    n_q_heads: int,
-    page_size: int,
-    kv_bits: int = 0,
-    act_itemsize: int = 4,
-) -> int:
-    """Modeled HBM bytes moved by ONE layer's chunked-prefill read path.
-
-    Same accounting as :func:`decode_attn_bytes` with a ``chunk``-token
-    query block instead of one token: ``gather`` materializes the full
-    logical view (pool read + view write + view read, 3× per K/V and per
-    scale pool) before ``attend_dense`` reads it; the fused prefill grid
-    streams each mapped page once per (lane, kv head), 1× the view.  The
-    chunk's own K/V scatter into the pool is identical on both paths and
-    excluded.  Q read and O write cover the whole chunk.
-    """
-    import math
-
-    kv_isz = 1 if kv_bits else act_itemsize
-    n_blocks = max(1, math.ceil(context / page_size))
-    view = batch * n_blocks * page_size * n_kv_heads * head_dim * kv_isz
-    scale_view = (batch * n_blocks * page_size * n_kv_heads * 2
-                  if kv_bits else 0)
-    qo = 2 * batch * chunk * n_q_heads * head_dim * act_itemsize
-    tables = batch * n_blocks * 4
-    if backend == "gather":
-        return 2 * 3 * view + 2 * 3 * scale_view + qo + tables
-    if backend in ("pallas_interpret", "pallas_tpu"):
-        return 2 * view + 2 * scale_view + qo + tables
-    raise ValueError(f"unknown attention backend {backend!r}")

@@ -33,6 +33,21 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.obs import clock
+from repro.obs import costs  # noqa: F401  (public surface)
+from repro.obs.costs import (  # noqa: F401
+    CostLedger,
+    LinearSpec,
+    ModelDims,
+    OpCost,
+    decode_step_costs,
+    fork_cost,
+    gemv_cost,
+    linear_specs,
+    model_dims,
+    prefill_chunk_costs,
+    specs_from_dims,
+    total_cost,
+)
 from repro.obs.registry import (  # noqa: F401  (public surface)
     DEFAULT_LATENCY_BUCKETS,
     Counter,

@@ -18,3 +18,11 @@ import time
 def now() -> float:
     """Monotonic seconds (the process-wide serve-path timebase)."""
     return time.perf_counter()
+
+
+def sleep(seconds: float) -> None:
+    """The one legal sleep on timed paths (benchmarks, retry backoff):
+    hand-rolled ``time.sleep`` next to hand-rolled timestamps is how
+    wall-clock reads sneak back in, so both ride this module."""
+    if seconds > 0:
+        time.sleep(seconds)

@@ -23,11 +23,13 @@ from typing import Deque, Dict, List, Optional, Tuple
 
 from repro.obs import clock as _clock
 from repro.obs import spans
+from repro.obs.costs import CostLedger, OpCost
 from repro.obs.registry import MetricsRegistry
 from repro.obs.spans import RequestTimeline
 from repro.obs.trace import (
     CACHE_TID,
     ENGINE_TID,
+    MEM_TID,
     PAGES_TID,
     SCHED_TID,
     ChromeTracer,
@@ -66,6 +68,27 @@ class Telemetry:
         self._max_timelines = max_timelines
         self._step_n = 0
         self._n_slots = 0
+        self.costs = CostLedger()
+        self._last_pages = (0, 0, 0)  # (free, cached, evictable)
+        # per-op (flops, bytes) counter pairs, resolved once: on_costs
+        # runs on every prefill/decode dispatch and labeled registry
+        # lookups are the hot part of the charge
+        self._cost_counters: Dict[str, tuple] = {}
+        # hot-path instruments resolved once: the per-token and per-step
+        # hooks fire hundreds of times per serve and the create-or-return
+        # registry lookup (label-key build + dict probes) costs more than
+        # the inc/observe itself
+        reg = self.registry
+        self._c_tokens = reg.counter("serve_tokens_generated_total")
+        self._c_steps = reg.counter("serve_steps_total")
+        self._c_prefill_tokens = reg.counter("serve_prefill_tokens_total")
+        self._h_step = reg.histogram("serve_step_s")
+        self._h_tpot = reg.histogram("serve_tpot_s")
+        self._h_ttft = reg.histogram("serve_ttft_s")
+        self._h_prefill = reg.histogram("serve_prefill_chunk_s")
+        self._h_decode = reg.histogram("serve_decode_step_s")
+        self._g_pages = (reg.gauge("pages_free"), reg.gauge("pages_cached"),
+                        reg.gauge("pages_evictable"))
 
     # ------------------------------------------------------------ plumbing
     def now(self) -> float:
@@ -83,6 +106,7 @@ class Telemetry:
         tr.thread_name(SCHED_TID, "scheduler")
         tr.thread_name(CACHE_TID, "prefix-cache")
         tr.thread_name(PAGES_TID, "pages")
+        tr.thread_name(MEM_TID, "memory")
 
     def _timeline(self, rid: int) -> Optional[RequestTimeline]:
         return self.timelines.get(rid)
@@ -101,9 +125,14 @@ class Telemetry:
 
     def step_end(self, t0: float) -> None:
         t1 = self.clock()
-        self.registry.counter("serve_steps_total").inc()
-        self.registry.histogram("serve_step_s").observe(t1 - t0)
+        self._c_steps.inc()
+        self._h_step.observe(t1 - t0)
         if self.tracer is not None:
+            # sample pool occupancy into the "memory" track once per step
+            free, cached, evictable = self._last_pages
+            self.tracer.counter(MEM_TID, "memory",
+                                {"free": free, "cached": cached,
+                                 "evictable": evictable})
             self.tracer.end(ENGINE_TID, "step", t=t1)
 
     def phase(self, name: str):
@@ -176,8 +205,8 @@ class Telemetry:
         """
         t1 = self.clock()
         n_total = sum(n for _, _, n in lanes)
-        self.registry.counter("serve_prefill_tokens_total").inc(n_total)
-        self.registry.histogram("serve_prefill_chunk_s").observe(t1 - t0)
+        self._c_prefill_tokens.inc(n_total)
+        self._h_prefill.observe(t1 - t0)
         for slot, rid, n in lanes:
             tl = self._timeline(rid)
             if tl is not None:
@@ -189,27 +218,26 @@ class Telemetry:
     def on_decode(self, lanes: List[Tuple[int, int]], t0: float) -> None:
         """One batched decode-step dispatch landed (``(slot, rid)``)."""
         t1 = self.clock()
-        self.registry.histogram("serve_decode_step_s").observe(t1 - t0)
+        self._h_decode.observe(t1 - t0)
         if self.tracer is not None:
             for slot, rid in lanes:
                 self.tracer.complete(1 + slot, "decode", t0, t1,
                                      args={"rid": rid})
 
     def on_first_token(self, rid: int, ttft_s: float, t: float) -> None:
-        self.registry.histogram("serve_ttft_s").observe(ttft_s)
-        self.registry.counter("serve_tokens_generated_total").inc()
+        self._h_ttft.observe(ttft_s)
+        self._c_tokens.inc()
         tl = self._timeline(rid)
         if tl is not None:
             tl.transition(spans.DECODING, t)
             tl.token(t)
 
     def on_token(self, rid: int, t: float) -> None:
-        self.registry.counter("serve_tokens_generated_total").inc()
+        self._c_tokens.inc()
         tl = self._timeline(rid)
         if tl is not None:
             if tl.last_token_t is not None:
-                self.registry.histogram("serve_tpot_s").observe(
-                    t - tl.last_token_t)
+                self._h_tpot.observe(t - tl.last_token_t)
             tl.token(t)
 
     def on_retire(self, rid: int, reason: str, n_out: int) -> None:
@@ -251,6 +279,8 @@ class Telemetry:
         """A faulted request was requeued for a recompute-style retry."""
         t = self.clock()
         self.registry.counter("serve_retries_total", kind=kind).inc()
+        # everything charged to the request so far will be recomputed
+        self.costs.mark_retry(rid)
         tl = self._timeline(rid)
         if tl is not None:
             # like preemption, a retry loops the request back to QUEUED
@@ -326,12 +356,65 @@ class Telemetry:
             self.tracer.instant(CACHE_TID, "evict",
                                 args={"pages": n_pages})
 
-    def on_pages(self, free: int, cached: int = 0) -> None:
-        self.registry.gauge("pages_free").set(free)
-        self.registry.gauge("pages_cached").set(cached)
+    def on_pages(self, free: int, cached: int = 0,
+                 evictable: int = 0) -> None:
+        g_free, g_cached, g_evictable = self._g_pages
+        g_free.set(free)
+        g_cached.set(cached)
+        g_evictable.set(evictable)
+        self._last_pages = (free, cached, evictable)
         if self.tracer is not None:
             self.tracer.counter(PAGES_TID, "pages",
-                                {"free": free, "cached": cached})
+                                {"free": free, "cached": cached,
+                                 "evictable": evictable})
+
+    # ------------------------------------------------------------ cost ledger
+    def on_costs(self, op_costs: Dict[str, OpCost], rids=()) -> None:
+        """Charge one dispatch's analytic op→cost table (see
+        ``repro.obs.costs``) to the ledger, attributed evenly across the
+        participating requests, and mirror per-op totals into the
+        registry."""
+        self.costs.charge(op_costs, rids)
+        cache = self._cost_counters
+        for op, c in op_costs.items():
+            pair = cache.get(op)
+            if pair is None:
+                pair = cache[op] = (
+                    self.registry.counter("serve_cost_flops_total", op=op),
+                    self.registry.counter("serve_cost_bytes_total", op=op))
+            pair[0].inc(c.flops)
+            pair[1].inc(c.bytes)
+
+    # ---------------------------------------------------- snapshot / restore
+    def on_restore(self, rids, t: Optional[float] = None) -> None:
+        """Requests were restored mid-flight from a snapshot: any stale
+        non-terminal timeline for a restored rid is discarded and a fresh
+        one opened — restored requests must never dangle in a live span
+        state they can no longer leave."""
+        t = self.clock() if t is None else t
+        rids = list(rids)
+        for rid in rids:
+            self.registry.counter("serve_requests_restored_total").inc()
+            self.timelines[rid] = RequestTimeline(rid, t)
+        if self.tracer is not None:
+            self.tracer.instant(SCHED_TID, "restore",
+                                args={"restored": len(rids)})
+
+    def close_open_timelines(self, state: str = spans.ERRORED,
+                             t: Optional[float] = None) -> int:
+        """Force every non-terminal timeline into ``state`` (default
+        ``errored``).  For engines abandoned mid-flight — killed before a
+        snapshot restore, or shut down with requests in flight — so no
+        span dangles in a live state.  Returns the number closed."""
+        t = self.clock() if t is None else t
+        closed = 0
+        # _finish may evict over-cap rows from self.timelines: snapshot
+        for rid, tl in list(self.timelines.items()):
+            if tl.state not in spans.TERMINAL:
+                tl.transition(state, t)
+                self._finish(rid)
+                closed += 1
+        return closed
 
     # -------------------------------------------------------------- outputs
     def snapshot(self) -> Dict:
@@ -343,6 +426,7 @@ class Telemetry:
             "steps": self._step_n,
             "request_states": states,
             "metrics": self.registry.to_dict(),
+            "costs": self.costs.snapshot(),
         }
 
     def prometheus_text(self) -> str:
@@ -368,6 +452,7 @@ class NullTelemetry:
     enabled = False
     registry = None
     tracer = None
+    costs = None
     timelines: Dict[int, RequestTimeline] = {}
 
     def now(self) -> float:
@@ -451,8 +536,17 @@ class NullTelemetry:
     def on_cache_evict(self, n_pages):
         pass
 
-    def on_pages(self, free, cached=0):
+    def on_pages(self, free, cached=0, evictable=0):
         pass
+
+    def on_costs(self, op_costs, rids=()):
+        pass
+
+    def on_restore(self, rids, t=None):
+        pass
+
+    def close_open_timelines(self, state=None, t=None):
+        return 0
 
     def snapshot(self) -> Dict:
         return {}

@@ -38,6 +38,7 @@ ENGINE_TID = 0
 SCHED_TID = 1000
 CACHE_TID = 1001
 PAGES_TID = 1002
+MEM_TID = 1003  # "memory" track: pool occupancy/evictable/cached per step
 
 REQUIRED_KEYS = ("ph", "ts", "pid", "tid", "name")
 

@@ -172,6 +172,36 @@ def roofline_report(
     return report
 
 
+def compiled_costs(compiled) -> Dict[str, float]:
+    """Trip-count-corrected FLOPs/bytes of one compiled executable.
+
+    The cross-validation channel for the ``repro.obs.costs`` ledger
+    (``tests/test_costs.py``): XLA's own ``cost_analysis()`` visits every
+    ``while`` body once — scan-over-layers models undercount by
+    ~n_layers× — so the primary numbers come from the trip-count-aware
+    HLO analyzer, with the raw XLA values kept for reference (and as a
+    floor, matching :func:`roofline_report`).
+    """
+    from repro.roofline.hlo_cost import analyze_hlo_text
+
+    cost = compiled.cost_analysis()
+    xla_flops = _cost_value(cost, "flops")
+    xla_bytes = _cost_value(cost, "bytes accessed")
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    own = analyze_hlo_text(hlo) if hlo else {
+        "flops": xla_flops, "bytes": xla_bytes, "transcendentals": 0.0}
+    return {
+        "flops": max(own["flops"], xla_flops),
+        "bytes": own["bytes"],
+        "transcendentals": own.get("transcendentals", 0.0),
+        "xla_flops": xla_flops,
+        "xla_bytes": xla_bytes,
+    }
+
+
 def model_flops_for_cell(cfg, shape) -> float:
     """MODEL_FLOPS per the assignment: 6·N·D for training (N = params,
     D = tokens), 2·N_active·D for inference steps."""

@@ -210,6 +210,11 @@ class ServeEngine:
         self._clock = clock if clock is not None else obs.clock.now
         self.obs = (telemetry if telemetry is not None
                     else obs.telemetry(clock))
+        if chaos is not None:
+            # every fired fault self-reports through the engine's
+            # telemetry (ChaosInjector.fire) — including sites the engine
+            # never sees directly, like the allocator's page_grant
+            chaos.obs = self.obs
         # the EngineConfig is resolved into an EnginePlan exactly once, at
         # construction; the plan is the only engine object the decode loop
         # ever sees.  The mesh rides in the plan, so the sharded backend
@@ -304,6 +309,7 @@ class ServeEngine:
         self._next_rid = 0
         self.shed_count = 0  # AdmissionRejected raises since construction
         self.quarantined = 0  # requests finished with finish_reason="error"
+        self.retried = 0  # recompute-style retries granted across requests
         self._engine_step = 0
         # per-request restart budgets (rid -> RestartPolicy), created on
         # first fault, dropped at terminal states
@@ -318,6 +324,7 @@ class ServeEngine:
             self.page_size = page_size or self.scfg.page_size
             self.prefill_chunk = prefill_chunk or self.scfg.prefill_chunk
             max_blocks = pages_for(max_len, self.page_size)
+            self._max_blocks = max_blocks
             if n_pages is None:
                 n_pages = self.scfg.n_pages
             if not n_pages:  # full rectangle + null page: never preempts
@@ -382,6 +389,15 @@ class ServeEngine:
 
             self._decode_paged = _dec
             self._prefill_paged = _pf
+            # analytic cost tables (repro.obs.costs): the jitted decode /
+            # prefill shapes are fixed at construction, so one memoized
+            # table per dispatch kind prices every step.  Built lazily on
+            # the first charged step — with obs disabled they never exist.
+            self._cost_dims = None
+            self._cost_specs = None
+            self._decode_cost_table = None
+            self._prefill_cost_table = None
+            self._fork_cost_table = None
         else:
             self.prefix_cache = None
             if self.kv_bits:
@@ -595,9 +611,70 @@ class ServeEngine:
         }
         if self.prefix_cache is not None:
             out["prefix"] = self.prefix_cache.stats()
+        out["ft"] = {
+            "quarantined": self.quarantined,
+            "retried": self.retried,
+            "chaos": (self.chaos.summary()
+                      if self.chaos is not None else {}),
+        }
         if self.obs.enabled:
             out["obs"] = self.obs.snapshot()
+            out["costs"] = (self.obs.costs.snapshot()
+                            if self.obs.costs is not None else {})
         return out
+
+    # ================================================= cost attribution
+    def _cost_base(self):
+        """Model dims + live linear specs for the ledger tables (the
+        specs walk the *actual* param tree, so packed weights price at
+        ``bits/8`` bytes per element)."""
+        if self._cost_specs is None:
+            self._cost_dims = obs.model_dims(self.cfg)
+            self._cost_specs = obs.linear_specs(self.params)
+        return self._cost_dims, self._cost_specs
+
+    def _charge_decode(self, rids) -> None:
+        """Charge one paged decode step to the cost ledger.  The jitted
+        step always runs the full ``(n_slots, max_blocks·page_size)``
+        shapes regardless of how many lanes are active, so one memoized
+        table is exact for every step; attribution splits the step total
+        across the lanes that actually decoded."""
+        if not self.obs.enabled:
+            return
+        if self._decode_cost_table is None:
+            dims, specs = self._cost_base()
+            self._decode_cost_table = obs.decode_step_costs(
+                dims, batch=self.n_slots,
+                context=self._max_blocks * self.page_size,
+                page_size=self.page_size,
+                attn_backend=self.attn_backend,
+                kv_bits=self.kv_bits, specs=specs)
+        self.obs.on_costs(self._decode_cost_table, rids)
+
+    def _charge_prefill(self, rids) -> None:
+        """Charge one chunked-prefill dispatch (``(n_slots, chunk)``,
+        padded — see :meth:`_charge_decode` for why one table is exact)."""
+        if not self.obs.enabled:
+            return
+        if self._prefill_cost_table is None:
+            dims, specs = self._cost_base()
+            self._prefill_cost_table = obs.prefill_chunk_costs(
+                dims, batch=self.n_slots, chunk=self.prefill_chunk,
+                context=self._max_blocks * self.page_size,
+                page_size=self.page_size,
+                attn_backend=self.attn_backend,
+                kv_bits=self.kv_bits, specs=specs)
+        self.obs.on_costs(self._prefill_cost_table, rids)
+
+    def _charge_fork(self, rid: int) -> None:
+        """Charge one prefix-cache COW tail-page fork (pure page copies)."""
+        if not self.obs.enabled:
+            return
+        if self._fork_cost_table is None:
+            dims, _ = self._cost_base()
+            self._fork_cost_table = obs.costs.fork_cost(
+                dims, page_size=self.page_size, kv_bits=self.kv_bits)
+        self.obs.on_costs(self._fork_cost_table, (rid,))
 
     # ==================================================== invariant audit
     def audit(self) -> None:
@@ -733,6 +810,7 @@ class ServeEngine:
                 "next_rid": self._next_rid,
                 "shed_count": self.shed_count,
                 "quarantined": self.quarantined,
+                "retried": self.retried,
                 "engine_step": self._engine_step,
             },
             "alloc": {
@@ -851,6 +929,7 @@ class ServeEngine:
         self._next_rid = eng["next_rid"]
         self.shed_count = eng["shed_count"]
         self.quarantined = eng["quarantined"]
+        self.retried = eng.get("retried", 0)  # absent in older snapshots
         self._engine_step = eng["engine_step"]
         self._retry = {}
         for rid, (restarts, last_step) in host["retry"].items():
@@ -859,6 +938,11 @@ class ServeEngine:
                 backoff_s=0.0,
                 reset_after_steps=self.scfg.retry_reset_steps,
                 restarts=restarts, last_failure_step=last_step)
+        # in-flight requests resume under *this* engine's telemetry:
+        # fresh timelines open for every restored rid (any stale
+        # non-terminal timeline from a prior run of this engine is
+        # discarded), so their spans terminate cleanly on retire
+        self.obs.on_restore(sorted(by_rid))
 
     def save_snapshot(self, directory: str, step: int) -> str:
         """Persist :meth:`snapshot` through ``repro.ckpt`` (manifest +
@@ -913,7 +997,7 @@ class ServeEngine:
         self._errored_step = []  # quarantines land here (terminal too)
         if self.chaos is not None and self.chaos.fire("preempt_storm"):
             # mass eviction drill: recompute-style, token-preserving
-            self.obs.on_chaos("preempt_storm")
+            # (fire() itself reports the fault through chaos.obs)
             self.sched.preempt_storm()
         with self.obs.phase("admit"):
             self.sched.admit()
@@ -948,9 +1032,12 @@ class ServeEngine:
         """Run the device copies of pending copy-on-write forks (mid-page
         cache hits recorded at admission) before anything reads or writes
         the forked pages."""
-        for _slot, src, dst in self.sched.pending_forks:
+        for slot, src, dst in self.sched.pending_forks:
             self.pages = fork_tail_page(
                 self.pages, jnp.int32(src), jnp.int32(dst))
+            owner = self.sched.slot_req[slot]
+            if owner is not None:
+                self._charge_fork(owner.rid)
         self.sched.pending_forks.clear()
 
     def _prefill_once(self) -> None:
@@ -971,6 +1058,8 @@ class ServeEngine:
         self.obs.on_prefill(
             [(slot, self.sched.slot_req[slot].rid, n)
              for slot, n in lanes], t0)
+        self._charge_prefill(
+            [self.sched.slot_req[slot].rid for slot, _ in lanes])
         fault_slot, lg = self._inject_lane_chaos(
             [s for s, _ in lanes], lg)
         for slot, n_real in lanes:
@@ -1036,6 +1125,7 @@ class ServeEngine:
                 self.params, self.pages, bt, pos, active, tokens)
             lg = np.asarray(logits)  # host sync: the step has landed
         self.obs.on_decode([(s, r.rid) for s, r in ready], t0)
+        self._charge_decode([r.rid for _, r in ready])
         fault_slot, lg = self._inject_lane_chaos(
             [s for s, _ in ready], lg)
         for slot, req in ready:
@@ -1080,10 +1170,8 @@ class ServeEngine:
             return None, lg
         fault_slot = None
         if self.chaos.fire("step_fault"):
-            self.obs.on_chaos("step_fault")
             fault_slot = slots[self.chaos.pick("step_fault", len(slots))]
         if self.chaos.fire("nan_logits"):
-            self.obs.on_chaos("nan_logits")
             victim = slots[self.chaos.pick("nan_logits", len(slots))]
             lg = np.array(lg)  # np.asarray of a jax array may be read-only
             lg[victim] = np.nan
@@ -1146,6 +1234,7 @@ class ServeEngine:
         req.cached_tokens = 0
         req.last_logits = None
         req.retries += 1
+        self.retried += 1
         self.sched.queue.appendleft(req)
         self.obs.on_retry(req.rid, kind, pol.restarts)
 

@@ -204,15 +204,15 @@ class ServeFrontend:
         now = self._clock()
         chaos = getattr(self.engine, "chaos", None)
         if chaos is not None and self._live:
+            # fire() self-reports through chaos.obs — no explicit
+            # on_chaos here (it would double-count the site)
             if chaos.fire("cancel"):
-                self.engine.obs.on_chaos("cancel")
                 victim = self._live[chaos.pick("cancel", len(self._live))]
                 self.cancel(victim)
             if chaos.fire("deadline_skew"):
                 # the sweep below sees a skewed clock: deadlines near the
                 # boundary trip early, exercising the cancel-on-deadline
                 # path against requests mid-prefill/decode
-                self.engine.obs.on_chaos("deadline_skew")
                 now = now + chaos.skew_s
         for stream in list(self._live):
             if (stream.deadline_s is not None

@@ -214,11 +214,13 @@ class PageAllocator:
         self._cache = cache
 
     def _emit_pages(self) -> None:
-        """Publish pool occupancy (free / cache-resident) to telemetry —
-        the ``C`` counter series on the pages trace track."""
+        """Publish pool occupancy (free / cache-resident / evictable) to
+        telemetry — the ``C`` counter series on the pages trace track,
+        and the per-step "memory" track sample."""
         self.obs.on_pages(
             len(self.free),
-            self._cache.cached_pages if self._cache is not None else 0)
+            self._cache.cached_pages if self._cache is not None else 0,
+            self.evictable_pages)
 
     # ----------------------------------------------------------- capacity
     @property

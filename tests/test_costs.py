@@ -1,0 +1,262 @@
+"""The per-step cost ledger (``repro.obs.costs``) and the perf-history
+regression gate (``benchmarks.history``).
+
+Three contracts:
+
+* **Honesty** — for two small dense shapes, kv_bits 0/8, one paged
+  decode step and one chunked prefill, the analytic FLOPs tables match
+  what XLA actually compiled (``jax.jit(...).lower().compile()`` routed
+  through the trip-count-aware ``repro.roofline.analysis.compiled_costs``)
+  within 5%.
+* **Attribution** — a served engine charges every dispatch to the ledger:
+  per-op totals cover gemv (including the synthesized tied-embedding
+  lm_head), attention, kv writes; per-request rows sum to the totals;
+  a chaos-retried request's recomputed work lands in ``wasted_flops``
+  and the ft/chaos counters surface through ``ServeEngine.metrics()``.
+* **Regression gate** — ``benchmarks.history.check_regression`` fails a
+  synthetic 20% tok/s regression against the recorded best, skips
+  records from a different device/interpret provenance, and passes an
+  unchanged record.
+"""
+
+import functools
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config.base import EngineConfig, ModelConfig, ServeConfig
+from repro.models import decode_step_paged, init_params, prefill_chunk
+from repro.obs import Telemetry, costs
+from repro.roofline.analysis import compiled_costs
+from repro.serve import ServeEngine
+from repro.serve.pages import init_kv_pages
+
+from conftest import reduced_f32
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+SHAPES = [
+    ModelConfig(name="a", family="dense", n_layers=2, d_model=128,
+                n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512),
+    ModelConfig(name="b", family="dense", n_layers=3, d_model=256,
+                n_heads=8, n_kv_heads=4, d_ff=512, vocab_size=1024),
+]
+B, PAGE, NBLK, CHUNK = 4, 8, 4, 16
+TOL = 0.05
+
+PROMPTS = [[1, 2, 3], [4], [5, 6], [7, 8, 9, 10]]
+
+
+# ------------------------------------------------- modeled vs compiled
+def _paged_inputs(cfg, kv_bits):
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pages = init_kv_pages(cfg, B * NBLK + 1, PAGE, kv_bits=kv_bits)
+    bt = jnp.arange(1, 1 + B * NBLK, dtype=jnp.int32).reshape(B, NBLK)
+    return params, pages, bt
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+@pytest.mark.parametrize("cfg", SHAPES, ids=lambda c: c.name)
+def test_decode_flops_match_compiled(cfg, kv_bits):
+    params, pages, bt = _paged_inputs(cfg, kv_bits)
+    fn = jax.jit(functools.partial(decode_step_paged, cfg=cfg, eng=None,
+                                   attn_backend="gather"))
+    comp = fn.lower(params, pages, bt, jnp.full((B,), 5, jnp.int32),
+                    jnp.ones((B,), bool),
+                    jnp.zeros((B, 1), jnp.int32)).compile()
+    measured = compiled_costs(comp)["flops"]
+    modeled = costs.total_cost(costs.decode_step_costs(
+        costs.model_dims(cfg), batch=B, context=NBLK * PAGE,
+        page_size=PAGE, kv_bits=kv_bits)).flops
+    assert measured > 0
+    ratio = modeled / measured
+    assert 1 - TOL <= ratio <= 1 + TOL, (
+        f"decode {cfg.name} kv{kv_bits}: modeled {modeled:.3e} vs "
+        f"compiled {measured:.3e} (ratio {ratio:.4f})")
+
+
+@pytest.mark.parametrize("kv_bits", [0, 8])
+@pytest.mark.parametrize("cfg", SHAPES, ids=lambda c: c.name)
+def test_prefill_flops_match_compiled(cfg, kv_bits):
+    params, pages, bt = _paged_inputs(cfg, kv_bits)
+    fn = jax.jit(functools.partial(prefill_chunk, cfg=cfg, eng=None,
+                                   attn_backend="gather"))
+    comp = fn.lower(params, pages, bt, jnp.zeros((B, CHUNK), jnp.int32),
+                    jnp.zeros((B,), jnp.int32),
+                    jnp.full((B,), CHUNK, jnp.int32)).compile()
+    measured = compiled_costs(comp)["flops"]
+    modeled = costs.total_cost(costs.prefill_chunk_costs(
+        costs.model_dims(cfg), batch=B, chunk=CHUNK, context=NBLK * PAGE,
+        page_size=PAGE, kv_bits=kv_bits)).flops
+    assert measured > 0
+    ratio = modeled / measured
+    assert 1 - TOL <= ratio <= 1 + TOL, (
+        f"prefill {cfg.name} kv{kv_bits}: modeled {modeled:.3e} vs "
+        f"compiled {measured:.3e} (ratio {ratio:.4f})")
+
+
+def test_tied_embedding_lm_head_synthesized():
+    """``linear_specs`` walks the live param tree and cannot see a tied
+    lm_head — the table builders must synthesize one, or the logits
+    GEMV (the single largest decode op) goes unbilled."""
+    cfg = reduced_f32("qwen2.5-3b")
+    assert cfg.tie_embeddings
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    specs = costs.linear_specs(params)
+    assert not any(s.name.endswith("lm_head") for s in specs)
+    table = costs.decode_step_costs(
+        costs.model_dims(cfg), batch=2, context=32, page_size=4,
+        specs=specs)
+    assert "gemv/lm_head" in table
+    assert table["gemv/lm_head"].flops > 0
+
+
+# ------------------------------------------------- ledger in the engine
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced_f32("qwen2.5-3b")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, tel, *, chaos=None, max_new=5):
+    scfg = ServeConfig(max_new_tokens=max_new,
+                       engine=EngineConfig(backend="reference"),
+                       max_request_retries=1)
+    return ServeEngine(cfg, params, scfg, n_slots=2, max_len=32,
+                       mode="paged", page_size=4, prefill_chunk=3,
+                       telemetry=tel, chaos=chaos)
+
+
+def test_ledger_charges_every_dispatch(model):
+    cfg, params = model
+    tel = Telemetry(trace=False)
+    eng = _engine(cfg, params, tel)
+    for p in PROMPTS:
+        eng.submit(list(p))
+    done = eng.run()
+    assert all(r.done for r in done)
+
+    m = eng.metrics()
+    led = m["costs"]
+    assert led["total_flops"] > 0 and led["total_bytes"] > 0
+    ops = set(led["by_op"])
+    assert {"attn_decode", "attn_prefill", "kv_write", "other"} <= ops
+    assert "gemv/lm_head" in ops  # tied embeddings: synthesized spec
+    assert any(o.startswith("gemv/") and o != "gemv/lm_head" for o in ops)
+
+    # even attribution: per-request rows sum back to the totals
+    reqs = led["requests"]
+    assert sorted(int(k) for k in reqs) == [r.rid for r in done]
+    tot_f = sum(row["flops"] for row in reqs.values())
+    assert tot_f == pytest.approx(led["total_flops"], rel=1e-6)
+    assert led["wasted_flops"] == 0
+
+    # the registry mirrors the per-op totals (Prometheus-exportable)
+    counters = m["obs"]["metrics"]["counters"]
+    flops_counters = {k: v for k, v in counters.items()
+                      if k.startswith("serve_cost_flops_total")}
+    assert sum(flops_counters.values()) == pytest.approx(
+        led["total_flops"], rel=1e-6)
+
+
+def test_retry_waste_attributed_under_chaos(model):
+    from repro.ft import ChaosInjector
+
+    cfg, params = model
+    tel = Telemetry(trace=False)
+    chaos = ChaosInjector(seed=0, schedule={"step_fault": {1}})
+    eng = _engine(cfg, params, tel, chaos=chaos)
+    for p in PROMPTS:
+        eng.submit(list(p))
+    done = eng.run()
+    assert all(r.done for r in done)
+
+    m = eng.metrics()
+    assert m["ft"]["retried"] >= 1
+    assert m["ft"]["quarantined"] == 0
+    assert m["ft"]["chaos"].get("step_fault", 0) >= 1
+
+    # work charged before the fault is recomputed: it must show as waste
+    led = m["costs"]
+    assert led["wasted_flops"] > 0
+    retried = [row for row in led["requests"].values()
+               if row["retries"] > 0]
+    assert retried and all(row["wasted_flops"] > 0 for row in retried)
+
+    # the injector self-reports through the engine's telemetry
+    counters = m["obs"]["metrics"]["counters"]
+    chaos_hits = sum(v for k, v in counters.items()
+                     if k.startswith("serve_chaos_injected_total"))
+    assert chaos_hits == sum(m["ft"]["chaos"].values())
+    retry_hits = sum(v for k, v in counters.items()
+                     if k.startswith("serve_retries_total"))
+    assert retry_hits == m["ft"]["retried"]
+
+
+def test_ledger_off_engine_reports_no_costs(model):
+    cfg, params = model
+    from repro.obs.telemetry import NULL_TELEMETRY
+
+    eng = _engine(cfg, params, NULL_TELEMETRY)
+    eng.submit([1, 2, 3])
+    eng.run()
+    m = eng.metrics()
+    assert "costs" not in m and "obs" not in m
+    assert m["ft"]["retried"] == 0  # ft block is always present
+
+
+# ------------------------------------------------- perf-history gate
+def _record(tok=100.0, bpt=50.0, device="cpu", interpret=True):
+    return {"bench": "costs", "device_kind": device,
+            "interpret_mode": interpret,
+            "results": [{"arm": "ledger", "tok_per_s": tok}],
+            "ledger": {"ledger_bytes_per_tok": bpt}}
+
+
+def test_check_regression_fires_on_synthetic_regression(tmp_path):
+    from benchmarks import history
+
+    out = str(tmp_path / "BENCH_costs.json")
+    hpath = history.append_record(out, _record())
+    assert hpath == str(tmp_path / history.HISTORY_NAME)
+
+    # unchanged record: no regression
+    assert history.check_regression(_record(), hpath, "costs") == []
+    # 20% tok/s drop and 20% bytes/token inflation: both caught
+    regs = history.check_regression(_record(tok=80.0, bpt=60.0),
+                                    hpath, "costs")
+    keys = {k for k, _, _ in regs}
+    assert any("tok_per_s" in k for k in keys)
+    assert any("bytes_per_tok" in k for k in keys)
+    # within tolerance: 5% off the best is not a regression at tol=10%
+    assert history.check_regression(_record(tok=95.0), hpath, "costs") == []
+    # a hardware run never gates against an interpret-mode baseline
+    assert history.check_regression(
+        _record(tok=10.0, device="TPU v4", interpret=False),
+        hpath, "costs") == []
+
+
+def test_history_provenance_and_best_prior(tmp_path):
+    from benchmarks import history
+
+    out = str(tmp_path / "BENCH_costs.json")
+    history.append_record(out, _record(tok=100.0))
+    history.append_record(out, _record(tok=120.0))
+    history.append_record(out, _record(tok=90.0, device="TPU v4"))
+    entries = history.load_history(history.history_path_for(out))
+    assert len(entries) == 3
+    assert all(e["bench"] == "costs" and "ts" in e and "commit" in e
+               for e in entries)
+    best = history.best_prior(entries, "costs", "cpu", True)
+    tok_keys = [k for k in best if "tok_per_s" in k]
+    assert tok_keys and best[tok_keys[0]] == 120.0  # best, not latest
+
+
+def test_history_self_test_passes(capsys):
+    from benchmarks import history
+
+    assert history.main(["--self-test"]) == 0
+    assert "self-test ok" in capsys.readouterr().out

@@ -1,0 +1,161 @@
+"""Trace validity under chaos and snapshot/restore.
+
+A Chrome trace exported from a serve run must stay schema-valid — and
+every request timeline must land in a terminal span state — no matter
+how the run ended: seeded chaos faults with retries, quarantines that
+exhaust the retry budget, or a kill-at-step-k engine whose in-flight
+requests were restored into a fresh engine.  Dangling non-terminal
+spans are exactly the bug class ``validate_trace`` and
+``spans.TERMINAL`` exist to catch: a crashed engine that leaves a
+request "decoding" forever renders as an open span across the rest of
+the profile.
+"""
+
+import pytest
+
+from repro.config.base import EngineConfig, ServeConfig
+from repro.ft import ChaosInjector
+from repro.models import init_params
+from repro.obs import Telemetry, spans, validate_trace
+from repro.serve import ServeEngine
+
+from conftest import reduced_f32
+
+PROMPTS = [[1, 2, 3], [4], [5, 6], [7, 8, 9, 10]]
+
+
+@pytest.fixture(scope="module")
+def model():
+    import jax
+
+    cfg = reduced_f32("qwen2.5-3b")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg, params, tel, *, chaos=None, max_request_retries=1,
+            max_new=5):
+    scfg = ServeConfig(max_new_tokens=max_new,
+                       engine=EngineConfig(backend="reference"),
+                       max_request_retries=max_request_retries)
+    return ServeEngine(cfg, params, scfg, n_slots=2, max_len=32,
+                       mode="paged", page_size=4, prefill_chunk=3,
+                       telemetry=tel, chaos=chaos)
+
+
+def _assert_all_terminal(tel):
+    states = {rid: tl.state for rid, tl in tel.timelines.items()}
+    bad = {rid: s for rid, s in states.items() if s not in spans.TERMINAL}
+    assert not bad, f"non-terminal timelines after run: {bad}"
+    return states
+
+
+def test_trace_valid_under_chaos_retries(model):
+    cfg, params = model
+    tel = Telemetry(trace=True)
+    chaos = ChaosInjector(seed=3, schedule={"step_fault": {1}})
+    eng = _engine(cfg, params, tel, chaos=chaos)
+    for p in PROMPTS:
+        eng.submit(list(p))
+    done = eng.run()
+    assert all(r.done for r in done)
+    assert eng.retried >= 1
+
+    counts = validate_trace(tel.tracer.export())
+    assert sum(counts.values()) > 0
+    states = _assert_all_terminal(tel)
+    assert set(states.values()) == {spans.RETIRED}
+    # the fault and the retry both left scheduler-track marks
+    names = {(e["tid"], e["name"]) for e in tel.tracer.events}
+    assert (1000, "fault") in names and (1000, "retry") in names
+
+
+def test_trace_valid_with_quarantine(model):
+    """Retry budget zero: the quarantined request's timeline must end
+    ``errored`` (terminal), not dangle in a live decode span."""
+    cfg, params = model
+    tel = Telemetry(trace=True)
+    chaos = ChaosInjector(seed=5, schedule={"nan_logits": {2}})
+    eng = _engine(cfg, params, tel, chaos=chaos, max_request_retries=0)
+    for p in PROMPTS:
+        eng.submit(list(p))
+    done = eng.run()
+    errs = [r for r in done if r.finish_reason == "error"]
+    assert len(errs) == 1 and eng.quarantined == 1
+
+    validate_trace(tel.tracer.export())
+    states = _assert_all_terminal(tel)
+    assert states[errs[0].rid] == spans.ERRORED
+    assert sorted(states.values()).count(spans.RETIRED) == len(PROMPTS) - 1
+
+
+def test_trace_valid_across_kill_and_restore(model):
+    """Kill engine A at step k with requests in flight; restore into a
+    fresh engine B.  Both traces validate, A's abandoned timelines are
+    force-closed, B's restored timelines run to terminal states, and
+    the restore is counted."""
+    cfg, params = model
+    telA = Telemetry(trace=True)
+    engA = _engine(cfg, params, telA)
+    for p in PROMPTS:
+        engA.submit(list(p))
+    for _ in range(3):  # mid-prefill / early-decode crash point
+        engA.step()
+    snap = engA.snapshot()
+    in_flight = {r["rid"] for r in snap["host"]["requests"]}
+    assert in_flight  # the crash point must actually strand requests
+
+    # engine A is "killed": force-close whatever is still live
+    closed = telA.close_open_timelines()
+    assert closed == len(in_flight)
+    validate_trace(telA.tracer.export())
+    statesA = _assert_all_terminal(telA)
+    assert all(statesA[rid] == spans.ERRORED for rid in in_flight)
+
+    telB = Telemetry(trace=True)
+    engB = _engine(cfg, params, telB)
+    engB.restore(snap)
+    # restored requests open fresh timelines under B's telemetry
+    assert set(telB.timelines) == in_flight
+    assert (telB.registry.counter("serve_requests_restored_total").value
+            == len(in_flight))
+    done = engB.run()
+    assert {r.rid for r in done} == in_flight
+
+    validate_trace(telB.tracer.export())
+    statesB = _assert_all_terminal(telB)
+    assert all(statesB[rid] == spans.RETIRED for rid in in_flight)
+    names = {(e["tid"], e["name"]) for e in telB.tracer.events}
+    assert (1000, "restore") in names
+
+
+def test_trace_valid_chaos_then_restore(model):
+    """The load_bench --trace shape end to end: seeded chaos during the
+    run AND a kill-at-k restore — the restored engine's trace (with its
+    own chaos marks) still validates and terminates every span."""
+    cfg, params = model
+    chaosA = ChaosInjector(seed=7, schedule={"step_fault": {1}})
+    telA = Telemetry(trace=True)
+    engA = _engine(cfg, params, telA, chaos=chaosA)
+    for p in PROMPTS:
+        engA.submit(list(p))
+    for _ in range(4):
+        engA.step()
+    snap = engA.snapshot()
+    telA.close_open_timelines()
+    validate_trace(telA.tracer.export())
+    _assert_all_terminal(telA)
+
+    chaosB = ChaosInjector(seed=7, schedule={"step_fault": {0}})
+    telB = Telemetry(trace=True)
+    engB = _engine(cfg, params, telB, chaos=chaosB)
+    engB.restore(snap)
+    done = engB.run()
+    assert all(r.done or r.finish_reason == "error" for r in done)
+
+    validate_trace(telB.tracer.export())
+    _assert_all_terminal(telB)
+    # chaos fired in B's own run and self-reported through B's telemetry
+    if engB.retried or engB.quarantined:
+        assert (telB.registry.counter(
+            "serve_chaos_injected_total",
+            site="step_fault").value >= 1)
